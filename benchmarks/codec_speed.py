@@ -1,0 +1,109 @@
+"""Codec micro-benchmarks: encode/decode throughput per codec.
+
+Feeds EXPERIMENTS.md §Perf (codec lane): paper-faithful sequential ROC vs
+the TPU-adapted vectorized gap-ANS (numpy model of the Pallas kernel) vs
+EF/WT access.  ids/s and MB/s of decoded ids.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import BigANS, EliasFano, WaveletTree, roc_pop_set, roc_push_set
+from repro.core.gap_ans import GapAnsCodec
+from repro.core.vrans import VRans16Decoder, VRans16Encoder
+
+from .common import emit, save_result
+
+
+def bench(fn, reps=3):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(quick: bool = False):
+    n_total = 100_000 if quick else 1_000_000
+    k = n_total // 977
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, k, size=n_total)
+    order = np.argsort(a, kind="stable")
+    sizes = np.bincount(a, minlength=k)
+    lists = np.split(order, np.cumsum(sizes)[:-1])
+    out = {}
+
+    # ROC (paper-faithful, exact sequential)
+    streams = []
+    enc_s = bench(lambda: [streams.clear()] and None or streams.extend(
+        _roc_enc(lists, n_total)), reps=1)
+    dec_s = bench(lambda: [roc_pop_set(BigANS(s.state), len(l), n_total)
+                           for s, l in zip(streams, lists)], reps=1)
+    out["roc"] = {"enc_ids_per_s": n_total / enc_s, "dec_ids_per_s": n_total / dec_s}
+    emit("codec_speed/roc_dec", dec_s / n_total * 1e6, f"{n_total/dec_s:.0f} ids/s")
+
+    # gap-ANS vectorized (TPU path model)
+    gc = GapAnsCodec()
+    blobs = []
+    enc_s = bench(lambda: (blobs.clear(), blobs.extend(
+        gc.encode(l, n_total) for l in lists))[-1] and None, reps=1)
+    dec_s = bench(lambda: [gc.decode(b, n_total) for b in blobs], reps=1)
+    out["gap_ans"] = {"enc_ids_per_s": n_total / enc_s, "dec_ids_per_s": n_total / dec_s}
+    emit("codec_speed/gap_dec", dec_s / n_total * 1e6, f"{n_total/dec_s:.0f} ids/s")
+
+    # EF decode + random access
+    efs = [EliasFano.encode(l, n_total) for l in lists]
+    dec_s = bench(lambda: [e.decode() for e in efs], reps=1)
+    out["ef"] = {"dec_ids_per_s": n_total / dec_s}
+    nacc = 10_000
+    acc_s = bench(lambda: [efs[i % k].access(0) for i in range(nacc)], reps=1)
+    out["ef"]["access_us"] = acc_s / nacc * 1e6
+    emit("codec_speed/ef_access", acc_s / nacc * 1e6, "")
+
+    # WT select
+    wt = WaveletTree.build(a, k, compressed=False)
+    nsel = 2_000
+    ks = rng.integers(0, k, nsel)
+    sel_s = bench(lambda: [wt.select(int(kk), 0) for kk in ks], reps=1)
+    out["wt"] = {"select_us": sel_s / nsel * 1e6}
+    emit("codec_speed/wt_select", sel_s / nsel * 1e6, "")
+    wt1 = WaveletTree.build(a, k, compressed=True)
+    sel_s = bench(lambda: [wt1.select(int(kk), 0) for kk in ks[:500]], reps=1)
+    out["wt1"] = {"select_us": sel_s / 500 * 1e6}
+    emit("codec_speed/wt1_select", sel_s / 500 * 1e6, "")
+
+    # raw interleaved vrANS16 lane decode (kernel's numpy model)
+    L, rows, r = 128, 2000, 12
+    data = rng.integers(0, 1 << r, size=(rows, L))
+    enc = VRans16Encoder(L)
+    for t in range(rows - 1, -1, -1):
+        enc.push_uniform(data[t], r)
+    heads, words = enc.finalize()
+    def dec_all():
+        d = VRans16Decoder(heads, words)
+        for _ in range(rows):
+            d.pop_uniform(r)
+    dec_s = bench(dec_all)
+    nsym = rows * L
+    out["vrans16"] = {"dec_syms_per_s": nsym / dec_s}
+    emit("codec_speed/vrans16_dec", dec_s / nsym * 1e6, f"{nsym/dec_s:.0f} sym/s")
+
+    save_result("codec_speed", out)
+    return out
+
+
+def _roc_enc(lists, n_total):
+    streams = []
+    for l in lists:
+        s = BigANS()
+        roc_push_set(s, l, n_total)
+        streams.append(s)
+    return streams
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Shared benchmark plumbing: dataset/partition caching, CSV emission."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parents[1]
+CACHE = ROOT / "experiments" / "bench_cache"
+RESULTS = ROOT / "experiments" / "results"
+
+DATASETS = ("sift-like", "deep-like", "ssnpp-like")
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """The scaffold's CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def save_result(table: str, payload) -> Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    p = RESULTS / f"{table}.json"
+    p.write_text(json.dumps(payload, indent=1, default=str))
+    return p
+
+
+def cached(key: str, fn):
+    """Disk-cache numpy dict results of fn()."""
+    CACHE.mkdir(parents=True, exist_ok=True)
+    p = CACHE / f"{key}.npz"
+    if p.exists():
+        with np.load(p, allow_pickle=False) as z:
+            return dict(z)
+    out = fn()
+    np.savez_compressed(p, **out)
+    return out
+
+
+def ivf_partition(preset: str, n: int, k: int, seed: int = 0) -> np.ndarray:
+    """Cluster assignment for an IVF-k partition of the synthetic dataset.
+
+    Centroids are trained on a 100k subsample (4 iters) and the full set is
+    assigned with the chunked JAX kernel — the size distribution (all that
+    id-compression rates depend on) matches a full k-means closely.
+    """
+    from repro.ann.kmeans import assign, kmeans
+    from repro.data.synthetic import make_dataset
+
+    def compute():
+        base, _ = make_dataset(preset, n, 10, seed=seed)
+        sub = base[np.random.default_rng(0).choice(n, min(n, 100_000), replace=False)]
+        cents = kmeans(sub, k, iters=4, seed=seed)
+        return {"assign": assign(base, cents).astype(np.int32)}
+
+    return cached(f"part_{preset}_{n}_{k}", compute)["assign"]
+
+
+def graph_adj(preset: str, n: int, r: int, kind: str, seed: int = 0):
+    """Cached NSG/HNSW-like adjacency (returns list of np arrays)."""
+    from repro.ann.graph import build_hnsw, build_nsg
+    from repro.data.synthetic import make_dataset
+
+    CACHE.mkdir(parents=True, exist_ok=True)
+    p = CACHE / f"graph_{kind}_{preset}_{n}_{r}.npz"
+    if p.exists():
+        with np.load(p) as z:
+            flat, offs = z["flat"], z["offs"]
+        return [flat[offs[i]:offs[i + 1]] for i in range(len(offs) - 1)]
+    base, _ = make_dataset(preset, n, 10, seed=seed)
+    adj = build_nsg(base, r) if kind == "nsg" else build_hnsw(base, r)
+    flat = np.concatenate([a for a in adj]) if adj else np.zeros(0, np.int64)
+    offs = np.concatenate([[0], np.cumsum([len(a) for a in adj])]).astype(np.int64)
+    np.savez_compressed(p, flat=flat, offs=offs)
+    return adj
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

@@ -1,0 +1,47 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Emits ``name,us_per_call,derived`` CSV lines (the scaffold contract) and
+writes structured JSON to experiments/results/.  ``--quick`` shrinks data
+sizes for smoke use; default sizes reproduce the paper-comparable numbers.
+"""
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset: table1 table2 table3 table4 fig3 moe codec roofline")
+    args = ap.parse_args()
+
+    from . import (codec_speed, fig3_code_compression, moe_routing, roofline,
+                   table1_bpe, table2_search_time, table3_offline_graph,
+                   table4_large_scale)
+
+    suites = {
+        "table1": table1_bpe.main,
+        "table2": table2_search_time.main,
+        "table3": table3_offline_graph.main,
+        "table4": table4_large_scale.main,
+        "fig3": fig3_code_compression.main,
+        "moe": moe_routing.main,
+        "codec": codec_speed.main,
+        "roofline": roofline.main,
+    }
+    chosen = args.only or list(suites)
+    for name in chosen:
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            suites[name](quick=args.quick)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/FAILED,0.0,{type(e).__name__}:{e}", flush=True)
+            continue
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Paper Table 1: bits-per-id for IVF and NSG indices, online setting.
+
+IVF{256,512,1024,2048} x {unc64, compact, ef, wt, wt1, roc, gap_ans} on the
+three synthetic datasets (N=1e6 default; rates depend only on N and the
+cluster-size distribution, which matches the paper's k-means setting — see
+DESIGN.md §9).  NSG{16..256} friend-list coding runs at N=1e5 (graph build
+is O(N^2); scale noted in EXPERIMENTS.md).  The `saving` column
+(compact - bpe) is the scale-free quantity to compare with the paper.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core import EliasFano, BigANS, WaveletTree, roc_push_set, set_information_bits
+from repro.core.gap_ans import GapAnsCodec
+
+from .common import DATASETS, Timer, emit, graph_adj, ivf_partition, save_result
+
+IVF_KS = (256, 512, 1024, 2048)
+NSG_RS = (16, 32, 64)
+N_IVF = 1_000_000      # paper scale (sift-like); secondary presets at 300k
+N_IVF_SMALL = 300_000
+N_GRAPH = 30_000       # shares the graph cache with table3
+
+
+def ivf_bpe(preset: str, n: int, k: int) -> dict:
+    a = ivf_partition(preset, n, k)
+    sizes = np.bincount(a, minlength=k)
+    order = np.argsort(a, kind="stable")
+    lists = np.split(order, np.cumsum(sizes)[:-1])
+    logn = math.ceil(math.log2(n))
+    out = {"unc64": 64.0, "compact": float(logn)}
+
+    with Timer() as t:
+        bits = sum(EliasFano.encode(l, n).size_bits for l in lists)
+    out["ef"] = bits / n
+    out["ef_enc_s"] = t.s
+
+    with Timer() as t:
+        wt = WaveletTree.build(a, k, compressed=False)
+    out["wt"] = wt.size_bits / n
+    out["wt_enc_s"] = t.s
+    with Timer() as t:
+        wt1 = WaveletTree.build(a, k, compressed=True)
+    out["wt1"] = wt1.size_bits / n
+    out["wt1_enc_s"] = t.s
+
+    with Timer() as t:
+        bits = 0
+        for l in lists:
+            ans = BigANS()
+            roc_push_set(ans, l, n)
+            bits += ans.bits
+    out["roc"] = bits / n
+    out["roc_enc_s"] = t.s
+
+    gc = GapAnsCodec()
+    with Timer() as t:
+        bits = sum(gc.size_bits(gc.encode(l, n)) for l in lists)
+    out["gap_ans"] = bits / n
+    out["gap_enc_s"] = t.s
+
+    # information-theoretic set bound for reference
+    out["bound"] = float(
+        sum(set_information_bits(n, int(s)) for s in sizes if s) / n
+    )
+    return out
+
+
+def graph_bpe(preset: str, n: int, r: int, kind: str = "nsg") -> dict:
+    adj = graph_adj(preset, n, r, kind)
+    edges = sum(len(x) for x in adj)
+    logn = math.ceil(math.log2(n))
+    out = {"unc32": 32.0, "compact": float(logn), "edges": edges,
+           "avg_degree": edges / n}
+    with Timer() as t:
+        bits = sum(
+            EliasFano.encode(x, n).size_bits for x in adj if len(x))
+    out["ef"] = bits / max(1, edges)
+    with Timer() as t:
+        bits = 0
+        for x in adj:
+            if not len(x):
+                continue
+            ans = BigANS()
+            roc_push_set(ans, x, n)
+            bits += ans.bits
+    out["roc"] = bits / max(1, edges)
+    out["roc_enc_s"] = t.s
+    gcodec = GapAnsCodec()
+    bits = sum(gcodec.size_bits(gcodec.encode(x, n)) for x in adj if len(x))
+    out["gap_ans"] = bits / max(1, edges)
+    return out
+
+
+def main(quick: bool = False):
+    n_graph = 10_000 if quick else N_GRAPH
+    rows = {}
+    for preset in DATASETS:
+        # paper scale for the primary preset; 300k for the others (CPU budget;
+        # the scale-free `saving = compact - bpe` column is the comparable one)
+        n_ivf = (200_000 if quick else
+                 (N_IVF if preset == "sift-like" else N_IVF_SMALL))
+        ks = (256, 1024) if (quick or preset != "sift-like") else IVF_KS
+        for k in ks:
+            key = f"{preset}/IVF{k}"
+            rows[key] = {"n": n_ivf, **ivf_bpe(preset, n_ivf, k)}
+            emit(f"table1/{key}/roc_bpe", 0.0, f"{rows[key]['roc']:.2f}")
+    rs = (16,) if quick else NSG_RS
+    for r in rs:  # graph rows: primary preset, cache shared with table3
+        key = f"sift-like/NSG{r}"
+        rows[key] = graph_bpe("sift-like", n_graph, r)
+        emit(f"table1/{key}/roc_bpe", 0.0, f"{rows[key]['roc']:.2f}")
+    save_result("table1_bpe", {"n_graph": n_graph, "rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Paper Table 2 / Figure 2: search wall-time with compressed indices.
+
+IVF{256..2048} x id codecs, flat vectors (max id-decode impact) and
+PQ{4,16,32} on IVF1024 (decode impact shrinks as distance compute grows —
+the paper's Fig. 2 trend).  Median of `reps` runs over a query batch, plus
+the id-resolution time isolated (the paper's §4.1 trick makes it O(topk)).
+N=200k, 1k queries (paper: 1M / 10k — CPU-budget scale, noted).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.ann.ivf import IVFIndex
+from repro.ann.pq import ProductQuantizer
+from repro.data.synthetic import make_dataset
+
+from .common import DATASETS, emit, save_result
+
+N = 200_000
+NQ = 500
+CODECS = ("unc64", "compact", "ef", "wt", "wt1", "roc", "gap_ans")
+
+
+_CENTROIDS = {}
+
+
+def _coarse(base, nlist, preset):
+    key = (preset, nlist)
+    if key not in _CENTROIDS:
+        from repro.ann.kmeans import kmeans
+
+        _CENTROIDS[key] = kmeans(base, nlist, iters=8, seed=1)
+    return _CENTROIDS[key]
+
+
+def run_config(base, queries, nlist, codec, pq_m=0, pq_bits=8, reps=2,
+               preset=""):
+    pq = ProductQuantizer(m=pq_m, bits=pq_bits) if pq_m else None
+    idx = IVFIndex(nlist=nlist, id_codec=codec, pq=pq).build(
+        base, seed=1, centroids=_coarse(base, nlist, preset))
+    walls, res = [], []
+    for _ in range(reps):
+        _, _, st = idx.search(queries, nprobe=16, topk=10)
+        walls.append(st.wall_s)
+        res.append(st.id_resolve_s)
+    return {
+        "wall_s": float(np.median(walls)),
+        "id_resolve_s": float(np.median(res)),
+        "bits_per_id": idx.bits_per_id(),
+    }
+
+
+def main(quick: bool = False):
+    rows = {}
+    datasets = DATASETS if not quick else DATASETS[:1]
+    nlists = (256, 512, 1024, 2048) if not quick else (1024,)
+    codecs = CODECS if not quick else ("unc64", "roc", "wt")
+    nq = NQ if not quick else 200
+    for preset in datasets:
+        base, queries = make_dataset(preset, N, nq, seed=0)
+        for nlist in nlists:
+            for codec in codecs:
+                key = f"{preset}/IVF{nlist}/{codec}"
+                rows[key] = run_config(base, queries, nlist, codec, preset=preset)
+                emit(f"table2/{key}", rows[key]["wall_s"] * 1e6 / nq,
+                     f"bpe={rows[key]['bits_per_id']:.2f}")
+        # Fig 2: PQ dimension sweep on IVF1024 (primary preset only)
+        if not quick and preset == "sift-like":
+            for m in (4, 16, 32):
+                for codec in ("unc64", "roc", "wt", "gap_ans"):
+                    key = f"{preset}/IVF1024-PQ{m}/{codec}"
+                    rows[key] = run_config(base, queries, 1024, codec, pq_m=m, preset=preset)
+                    emit(f"table2/{key}", rows[key]["wall_s"] * 1e6 / nq,
+                         f"bpe={rows[key]['bits_per_id']:.2f}")
+    save_result("table2_search_time", {"n": N, "nq": nq, "rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Quickstart: compress the ids of an IVF index, losslessly.
+
+Builds a 100k-vector IVF index, stores its inverted-list ids through each
+codec, verifies search results are bit-identical, and prints the paper's
+Table-1-style comparison.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.ann.ivf import IVFIndex
+from repro.data.synthetic import make_dataset
+
+
+def main():
+    print("building dataset (100k x 96)...")
+    base, queries = make_dataset("deep-like", 100_000, 100, seed=0)
+
+    ref = None
+    print(f"\n{'codec':>10} {'bits/id':>8} {'vs compact':>10} {'search ms':>10} "
+          f"{'identical':>9}")
+    for codec in ["unc64", "compact", "ef", "roc", "gap_ans", "wt", "wt1"]:
+        idx = IVFIndex(nlist=256, id_codec=codec).build(base, seed=1)
+        ids, _, st = idx.search(queries, nprobe=8, topk=10)
+        if ref is None:
+            ref = ids
+        same = bool(np.array_equal(ids, ref))
+        compact = np.ceil(np.log2(len(base)))
+        print(f"{codec:>10} {idx.bits_per_id():8.2f} "
+              f"{idx.bits_per_id()/compact:9.1%} "
+              f"{st.wall_s/len(queries)*1e3:10.3f} {str(same):>9}")
+    print("\nAll codecs return identical results — compression is lossless.")
+
+
+if __name__ == "__main__":
+    main()

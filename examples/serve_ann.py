@@ -1,0 +1,76 @@
+"""End-to-end driver: serve an ANN index with compressed ids (batched).
+
+The paper's deployment scenario: a RAM-resident IVF index answers batched
+nearest-neighbor queries; vector ids are ROC-compressed, PQ codes
+Polya-compressed, and id resolution is deferred to the final top-k (§4.1).
+Reports recall@10 vs exact search, QPS, and the RAM ledger vs the
+uncompressed layout.
+
+    PYTHONPATH=src python examples/serve_ann.py [--n 200000] [--queries 2000]
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.ann.ivf import IVFIndex
+from repro.ann.pq import ProductQuantizer
+from repro.data.synthetic import make_dataset
+
+
+def exact_topk(base, queries, k):
+    out = np.zeros((len(queries), k), np.int64)
+    for i in range(0, len(queries), 256):
+        q = queries[i:i + 256]
+        d = (np.sum(q**2, 1, keepdims=True) - 2 * q @ base.T
+             + np.sum(base**2, 1)[None])
+        out[i:i + 256] = np.argsort(d, 1)[:, :k]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=200_000)
+    ap.add_argument("--queries", type=int, default=1_000)
+    ap.add_argument("--nlist", type=int, default=1024)
+    ap.add_argument("--nprobe", type=int, default=16)
+    ap.add_argument("--pq-m", type=int, default=8)
+    args = ap.parse_args()
+
+    print(f"dataset: {args.n} x 128 (sift-like)")
+    base, queries = make_dataset("sift-like", args.n, args.queries, seed=0)
+    gt = exact_topk(base, queries, 10)
+
+    print("building compressed index (ROC ids + Polya PQ codes)...")
+    pq = ProductQuantizer(m=args.pq_m, bits=8)
+    idx = IVFIndex(nlist=args.nlist, id_codec="roc", pq=pq,
+                   code_codec="polya").build(base, seed=1)
+
+    t0 = time.perf_counter()
+    ids, _, st = idx.search(queries, nprobe=args.nprobe, topk=10)
+    wall = time.perf_counter() - t0
+    recall = np.mean([len(set(ids[i]) & set(gt[i])) / 10
+                      for i in range(len(queries))])
+
+    compact_bits = np.ceil(np.log2(args.n))
+    n = args.n
+    ram_unc = n * (64 / 8 + args.pq_m)
+    ram_cmp = (n * idx.bits_per_id() / 8
+               + n * args.pq_m * idx.code_bits_per_element() / 8)
+    print(f"\nrecall@10 (vs exact): {recall:.3f}")
+    print(f"throughput:           {len(queries)/wall:,.0f} QPS "
+          f"({wall/len(queries)*1e3:.2f} ms/query)")
+    print(f"id resolve overhead:  {st.id_resolve_s/len(queries)*1e6:.0f} us/query "
+          f"(late resolution, O(topk))")
+    print(f"\nRAM ledger (ids + codes):")
+    print(f"  uncompressed (64b ids):  {ram_unc/1e6:8.1f} MB")
+    print(f"  compact ({compact_bits:.0f}b ids):      "
+          f"{n*(compact_bits/8 + args.pq_m)/1e6:8.1f} MB")
+    print(f"  this server:             {ram_cmp/1e6:8.1f} MB "
+          f"({idx.bits_per_id():.2f}b ids, "
+          f"{idx.code_bits_per_element():.2f}b/code-elem)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro: JAX framework reproducing 'Lossless Compression of Vector IDs for
+Approximate Nearest Neighbor Search' (Severo et al., 2025) with a multi-pod
+LM training/serving runtime over 10 assigned architectures."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,69 @@
+"""Lloyd k-means in JAX (used for IVF coarse quantizers and PQ codebooks).
+
+Chunked distance computation keeps memory bounded at (chunk x k); the
+assignment step is the same compute pattern the Pallas ``l2_topk`` kernel
+accelerates on TPU (argmin = top-1).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["kmeans", "assign"]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _assign_jit(x, centroids, chunk: int = 8192):
+    n = x.shape[0]
+    chunk = min(chunk, n)
+
+    def body(i, acc):
+        sl = jax.lax.dynamic_slice_in_dim(x, i * chunk, chunk, 0)
+        d = (
+            jnp.sum(sl * sl, 1, keepdims=True)
+            - 2.0 * sl @ centroids.T
+            + jnp.sum(centroids * centroids, 1)[None]
+        )
+        a = jnp.argmin(d, 1).astype(jnp.int32)
+        return jax.lax.dynamic_update_slice_in_dim(acc, a, i * chunk, 0)
+
+    steps = n // chunk
+    acc = jnp.zeros((n,), jnp.int32)
+    acc = jax.lax.fori_loop(0, steps, body, acc)
+    rem = n - steps * chunk
+    if rem:
+        d = (
+            jnp.sum(x[steps * chunk:] ** 2, 1, keepdims=True)
+            - 2.0 * x[steps * chunk:] @ centroids.T
+            + jnp.sum(centroids**2, 1)[None]
+        )
+        acc = acc.at[steps * chunk:].set(jnp.argmin(d, 1).astype(jnp.int32))
+    return acc
+
+
+def assign(x: np.ndarray, centroids: np.ndarray) -> np.ndarray:
+    return np.asarray(_assign_jit(jnp.asarray(x), jnp.asarray(centroids)))
+
+
+def kmeans(x: np.ndarray, k: int, iters: int = 10, seed: int = 0) -> np.ndarray:
+    """Returns (k, d) centroids trained on x (numpy in/out, JAX inside)."""
+    rng = np.random.default_rng(seed)
+    n = x.shape[0]
+    centroids = x[rng.choice(n, size=k, replace=False)].astype(np.float32)
+    xj = jnp.asarray(x, jnp.float32)
+    for _ in range(iters):
+        a = _assign_jit(xj, jnp.asarray(centroids))
+        a = np.asarray(a)
+        sums = np.zeros_like(centroids)
+        np.add.at(sums, a, x)
+        counts = np.bincount(a, minlength=k).astype(np.float32)
+        empty = counts == 0
+        counts[empty] = 1.0
+        centroids = sums / counts[:, None]
+        if empty.any():  # re-seed empty clusters on far points
+            centroids[empty] = x[rng.choice(n, size=int(empty.sum()), replace=False)]
+    return centroids

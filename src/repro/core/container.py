@@ -1,0 +1,119 @@
+"""Offline index container: a whole IVF index as one compressed blob.
+
+The paper's *offline* setting (§4.3) — the index is stored or transmitted
+as a binary artifact and decompressed on load.  Ids for all clusters share
+a single exact-ANS stream (amortizing everything; `log n_k!` collected per
+cluster), PQ codes go through the Pólya coder, centroids ride along as
+f16.  This is what a checkpoint of the `retrieval/` side-car stores,
+and the unit the paper sizes in Table 4's "index" column.
+
+Format (little-endian):
+    magic "RIVF" | u32 version | u32 json_manifest_len | manifest |
+    payload sections (offsets in the manifest)
+"""
+
+from __future__ import annotations
+
+import io
+import json
+from typing import Optional
+
+import numpy as np
+
+from .ans import BigANS
+from .polya import polya_decode_clusters, polya_encode_clusters
+from .roc import roc_pop_set, roc_push_set
+
+__all__ = ["pack_ivf", "unpack_ivf"]
+
+_MAGIC = b"RIVF"
+_VERSION = 1
+
+
+def pack_ivf(index) -> bytes:
+    """Serialize a built repro.ann.ivf.IVFIndex into one blob."""
+    sizes = [int(s) for s in index.sizes]
+    # ids: one joint exact-ANS stream, clusters pushed in order
+    ans = BigANS()
+    for k in range(index.nlist):
+        ids = index._lists[k]
+        if len(ids):
+            roc_push_set(ans, ids, index.n)
+    id_blob = ans.tobytes()
+
+    sections = {}
+    payload = io.BytesIO()
+
+    def add(name: str, raw: bytes):
+        sections[name] = [payload.tell(), len(raw)]
+        payload.write(raw)
+
+    add("ids", id_blob)
+    cents = index.centroids.astype(np.float16)
+    add("centroids", cents.tobytes())
+    code_meta = None
+    if getattr(index, "_code_blob", None) is not None:
+        blob = index._code_blob
+        add("code_heads", blob["heads"].astype(np.uint64).tobytes())
+        words = blob["words"]
+        lens = np.array([len(w) for w in words], np.int64)
+        add("code_word_lens", lens.tobytes())
+        add("code_words", np.concatenate(
+            [w for w in words] or [np.zeros(0, np.uint32)]).tobytes())
+        code_meta = {"m": blob["m"]}
+    elif index.codes is not None:
+        add("codes_raw", index.codes.tobytes())
+        code_meta = {"m": int(index.codes.shape[1]), "raw": True}
+    manifest = {
+        "n": int(index.n), "d": int(index.d), "nlist": int(index.nlist),
+        "sizes": sizes, "code": code_meta,
+        "pq_m": int(index.pq.m) if index.pq else 0,
+        "sections": sections,
+    }
+    mraw = json.dumps(manifest).encode()
+    out = io.BytesIO()
+    out.write(_MAGIC)
+    out.write(np.uint32(_VERSION).tobytes())
+    out.write(np.uint32(len(mraw)).tobytes())
+    out.write(mraw)
+    out.write(payload.getvalue())
+    return out.getvalue()
+
+
+def unpack_ivf(raw: bytes):
+    """Returns (manifest, lists, centroids, codes|None)."""
+    assert raw[:4] == _MAGIC, "not an RIVF container"
+    ver = int(np.frombuffer(raw[4:8], np.uint32)[0])
+    assert ver == _VERSION
+    mlen = int(np.frombuffer(raw[8:12], np.uint32)[0])
+    manifest = json.loads(raw[12:12 + mlen].decode())
+    base = 12 + mlen
+
+    def sec(name):
+        off, ln = manifest["sections"][name]
+        return raw[base + off: base + off + ln]
+
+    n, nlist = manifest["n"], manifest["nlist"]
+    sizes = manifest["sizes"]
+    ans = BigANS.frombytes(sec("ids"))
+    lists = [None] * nlist
+    for k in range(nlist - 1, -1, -1):   # stack order: last pushed, first out
+        lists[k] = (roc_pop_set(ans, sizes[k], n) if sizes[k]
+                    else np.zeros(0, np.int64))
+    cents = np.frombuffer(sec("centroids"), np.float16).reshape(
+        nlist, manifest["d"]).astype(np.float32)
+    codes = None
+    cm = manifest["code"]
+    if cm and cm.get("raw"):
+        codes = np.frombuffer(sec("codes_raw"), np.uint8).reshape(-1, cm["m"])
+    elif cm:
+        heads = np.frombuffer(sec("code_heads"), np.uint64)
+        lens = np.frombuffer(sec("code_word_lens"), np.int64)
+        flat = np.frombuffer(sec("code_words"), np.uint32)
+        words, off = [], 0
+        for ln in lens:
+            words.append(flat[off:off + ln])
+            off += ln
+        per = polya_decode_clusters(heads, words, sizes, cm["m"])
+        codes = np.concatenate([c for c in per], axis=0)
+    return manifest, lists, cents, codes

@@ -1,0 +1,68 @@
+"""Gradient compression: int8 error-feedback quantization (cross-pod DP).
+
+At 2+ pods the gradient all-reduce crosses the slow inter-pod links; 4x
+compression there buys real step time.  Scheme (1-bit-Adam-style, but int8):
+per-tensor scale = max|g| / 127, quantize, DEQUANTIZE locally and keep the
+residual in an error-feedback accumulator folded into the next step — an
+unbiased-in-the-limit estimator that preserves convergence (validated in
+tests/test_distributed.py on a real training loss curve).
+
+``compress_tree_int8`` is the stateless variant used inside train_step;
+``EFCompressor`` carries the error-feedback state across steps.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_tree_int8", "EFCompressor", "ef_init", "ef_compress"]
+
+
+def _q8(g: jnp.ndarray) -> jnp.ndarray:
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree_int8(grads: Any) -> Any:
+    """Simulate the int8 all-reduce path: quantize-dequantize each leaf."""
+    return jax.tree.map(_q8, grads)
+
+
+class EFState(NamedTuple):
+    residual: Any
+
+
+def ef_init(params: Any) -> EFState:
+    return EFState(residual=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def ef_compress(grads: Any, state: EFState) -> Tuple[Any, EFState]:
+    """Error-feedback int8: compress (g + residual), carry the error."""
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q = _q8(gf)
+        return q, gf - q
+
+    pairs = jax.tree.map(one, grads, state.residual)
+    comp = jax.tree.map(lambda pr: pr[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda pr: pr[1], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return comp, EFState(residual=res)
+
+
+class EFCompressor:
+    """Object wrapper for loops that keep python-side state."""
+
+    def __init__(self, params):
+        self.state = ef_init(params)
+
+    def __call__(self, grads):
+        comp, self.state = ef_compress(grads, self.state)
+        return comp

@@ -1,0 +1,199 @@
+"""Divisibility-aware logical sharding rules (MaxText-style, DESIGN.md §6).
+
+Mesh axes: ``("data", "model")`` single pod, ``("pod", "data", "model")``
+multi-pod; ``pod`` is an outer data-parallel axis.  All rules degrade
+deterministically when a dimension does not divide the axis size — no
+config ever fails to shard, it just shards less.
+
+Parameters (leaf-name keyed):
+  * 2-D kernels          (in, out)   -> (fsdp="data", tp="model")
+  * "second" matrices    (wo, out_proj, lora_b, down)
+                          (in, out)  -> (tp="model",  fsdp="data")
+  * expert kernels       (E, in, out)-> (tp, fsdp, -) / wo: (tp, -, fsdp)
+  * embedding table      (V, d)      -> (tp, fsdp)
+  * biases / gains       (d,)        -> (tp) when divisible
+Activations:
+  * batch -> (pod, data); when batch==1 (long_500k) sequence -> data.
+KV caches / recurrent states: pattern-matched on shape (see cache_spec).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "param_spec",
+    "param_shardings",
+    "batch_shardings",
+    "cache_shardings",
+    "axis_size",
+    "dp_axes",
+]
+
+_SECOND_MATS = ("wo", "out_proj", "lora_b", "wd", "r")
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def _div(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+               n_experts: int = 0) -> P:
+    tp = axis_size(mesh, "model")
+    fsdp = axis_size(mesh, "data")
+    leaf = path.split("/")[-2] if path.endswith("kernel") or path.endswith("bias") \
+        else path.split("/")[-1]
+    is_second = any(leaf == s or leaf.endswith(s) for s in _SECOND_MATS)
+
+    # strip stacked scan dims: leading dims that came from vmap over layers
+    # are recognized by rank: rules apply to the trailing "logical" dims.
+    def spec_for_logical(lshape: Tuple[int, ...]) -> Tuple[Optional[str], ...]:
+        nd = len(lshape)
+        if nd == 1:
+            return ("model",) if _div(lshape[0], tp) else (None,)
+        if nd == 2:
+            a, b = lshape
+            if "embed/table" in path:
+                return ("model" if _div(a, tp) else None,
+                        "data" if _div(b, fsdp) else None)
+            if is_second:
+                return ("model" if _div(a, tp) else None,
+                        "data" if _div(b, fsdp) else None)
+            return ("data" if _div(a, fsdp) else None,
+                    "model" if _div(b, tp) else None)
+        if nd == 3 and n_experts and lshape[0] == n_experts:
+            e = "model" if _div(lshape[0], tp) else None
+            if is_second:  # (E, ff, d)
+                return (e, None, "data" if _div(lshape[2], fsdp) else None)
+            return (e, "data" if _div(lshape[1], fsdp) else None, None)
+        if nd == 3:
+            return (None,
+                    "data" if _div(lshape[1], fsdp) else None,
+                    "model" if _div(lshape[2], tp) else None)
+        # >=4D conv-ish / unusual: shard the last divisible dim on model
+        out = [None] * nd
+        for i in range(nd - 1, -1, -1):
+            if _div(lshape[i], tp):
+                out[i] = "model"
+                break
+        return tuple(out)
+
+    # count leading stacked dims: all dims before the final 1-3 logical dims.
+    # Heuristic: norms/gains are (L.., d); kernels are (L.., in, out) or
+    # (L.., E, in, out).  We treat trailing `k` dims as logical where k is
+    # 3 if an expert dim matches, else min(2, rank), except pure vectors.
+    nd = len(shape)
+    if nd == 0:
+        return P()
+    k = 1
+    if nd >= 3 and n_experts and shape[-3] == n_experts:
+        k = 3
+    elif nd >= 2:
+        k = 2
+    # vectors stacked over layers: (L, d) — d is the logical dim
+    if leaf in ("scale", "bias", "A_log", "D", "dt_bias") or (
+        nd >= 1 and k == 2 and path.endswith(("scale", "bias"))
+    ):
+        k = 1
+    if k > nd:
+        k = nd
+    logical = spec_for_logical(shape[nd - k:])
+    return P(*([None] * (nd - k)), *logical)
+
+
+def param_shardings(params_shapes: Any, mesh: Mesh, n_experts: int = 0) -> Any:
+    """Tree of NamedShardings matching a tree of ShapeDtypeStructs."""
+    def f(path, leaf):
+        spec = param_spec(_path_str(path), leaf.shape, mesh, n_experts)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(f, params_shapes)
+
+
+def batch_shardings(batch_specs: Any, mesh: Mesh) -> Any:
+    """Input shardings for train/prefill batches (dict of arrays)."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([axis_size(mesh, a) for a in dp]))
+
+    def f(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        if name.endswith("positions") and len(shape) == 3:  # (3, B, S)
+            b, s = shape[1], shape[2]
+            if _div(b, dp_size):
+                return NamedSharding(mesh, P(None, dp, None))
+            return NamedSharding(mesh, P(None, None, dp if _div(s, dp_size) else None))
+        if len(shape) >= 2:
+            b, s = shape[0], shape[1]
+            rest = [None] * (len(shape) - 2)
+            if _div(b, dp_size):
+                return NamedSharding(mesh, P(dp, None, *rest))
+            if _div(s, dp_size):
+                return NamedSharding(mesh, P(None, dp, *rest))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(f, batch_specs)
+
+
+def cache_shardings(cache_shapes: Any, mesh: Mesh, global_batch: int,
+                    n_kv_heads: int) -> Any:
+    """Shardings for KV caches / recurrent states (shape pattern-matched).
+
+    KV leaves (..., B, T, KV, hd): batch->dp when divisible; KV->model when
+    divisible else T->model (sequence-sharded decode); long-context batch=1
+    shards T over (data[, pod]) too.
+    """
+    tp = axis_size(mesh, "model")
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([axis_size(mesh, a) for a in dp]))
+
+    def f(path, leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        spec: list = [None] * nd
+        # locate the batch dim: first dim equal to global_batch
+        b_idx = next((i for i, d in enumerate(shape) if d == global_batch), None)
+        if nd >= 4 and shape[-2] == n_kv_heads:
+            t_idx, kv_idx = nd - 3, nd - 2
+            if b_idx is not None and b_idx < t_idx and _div(shape[b_idx], dp_size):
+                spec[b_idx] = dp
+                if _div(n_kv_heads, tp):
+                    spec[kv_idx] = "model"
+                elif _div(shape[t_idx], tp):
+                    spec[t_idx] = "model"
+            else:
+                # batch unshardable (long_500k): shard T over everything
+                if _div(shape[t_idx], dp_size * tp):
+                    spec[t_idx] = (*dp, "model")
+                elif _div(shape[t_idx], dp_size):
+                    spec[t_idx] = dp
+            return NamedSharding(mesh, P(*spec))
+        # recurrent states / conv windows: batch->dp; else last divisible->model
+        if b_idx is not None and _div(shape[b_idx], dp_size):
+            spec[b_idx] = dp
+        for i in range(nd - 1, -1, -1):
+            if spec[i] is None and i != b_idx and _div(shape[i], tp):
+                spec[i] = "model"
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(f, cache_shapes)

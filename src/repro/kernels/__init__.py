@@ -1,0 +1,3 @@
+# Pallas TPU kernels for the paper's compute hot-spots, each with a jit'd
+# wrapper (ops.py) and a pure-jnp oracle (ref.py); validated in interpret
+# mode on CPU, targeted at TPU v5e BlockSpec tiling.

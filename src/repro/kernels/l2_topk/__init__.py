@@ -1,0 +1,4 @@
+from .ops import l2_top1
+from .ref import l2_top1_ref
+
+__all__ = ["l2_top1", "l2_top1_ref"]

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: tiled L2 distance + fused arg-top1.
+
+The IVF coarse-probe and k-means assignment hot loop: for a tile of
+queries, compute squared L2 distances to all K centroids with one MXU
+matmul (||q||^2 - 2 q.c + ||c||^2) and reduce to (argmin, min) without
+writing the (BLOCK_Q, K) distance tile to HBM.
+
+Grid: (ceil(NQ / BLOCK_Q),).  Centroids (and their norms) are VMEM-resident
+across grid steps (constant index_map): K*d*4 bytes — e.g. 2048 x 128 f32
+= 1 MB.  MXU dims: BLOCK_Q x d x K, all multiples of 128 by construction
+(ops.py pads d and K).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["l2_top1_pallas", "BLOCK_Q"]
+
+BLOCK_Q = 256
+
+
+def _l2_kernel(q_ref, c_ref, cn_ref, idx_ref, val_ref):
+    q = q_ref[...]                       # (BLOCK_Q, d)
+    c = c_ref[...]                       # (K, d)
+    cn = cn_ref[...]                     # (K,)
+    dots = jnp.dot(q, c.T, preferred_element_type=jnp.float32)
+    qn = jnp.sum(q.astype(jnp.float32) ** 2, axis=1, keepdims=True)
+    dist = qn - 2.0 * dots + cn[None, :]
+    idx_ref[...] = jnp.argmin(dist, axis=1).astype(jnp.int32)
+    val_ref[...] = jnp.min(dist, axis=1)
+
+
+def l2_top1_pallas(queries: jnp.ndarray, centroids: jnp.ndarray,
+                   block_q: int = BLOCK_Q, interpret: bool = True):
+    """queries (NQ, d), centroids (K, d) -> (argmin (NQ,) i32, min (NQ,) f32)."""
+    nq, d = queries.shape
+    k = centroids.shape[0]
+    assert nq % block_q == 0
+    cn = jnp.sum(centroids.astype(jnp.float32) ** 2, axis=1)
+    grid = (nq // block_q,)
+    return pl.pallas_call(
+        _l2_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq,), jnp.int32),
+            jax.ShapeDtypeStruct((nq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(queries, centroids, cn)

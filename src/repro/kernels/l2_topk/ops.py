@@ -1,0 +1,24 @@
+"""Jitted wrapper: pads queries to BLOCK_Q and d/K to MXU-friendly sizes."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import BLOCK_Q, l2_top1_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_q"))
+def l2_top1(queries, centroids, block_q: int = BLOCK_Q, interpret: bool = True):
+    nq, d = queries.shape
+    k = centroids.shape[0]
+    pad_q = (-nq) % block_q
+    pad_d = (-d) % 128
+    pad_k = (-k) % 128
+    qp = jnp.pad(queries.astype(jnp.float32), ((0, pad_q), (0, pad_d)))
+    # padded centroids must not win the argmin: push them to +inf distance
+    cp = jnp.pad(centroids.astype(jnp.float32), ((0, pad_k), (0, pad_d)))
+    if pad_k:
+        cp = cp.at[k:, 0].set(3e18)
+    idx, val = l2_top1_pallas(qp, cp, block_q=block_q, interpret=interpret)
+    return idx[:nq], val[:nq]

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the L2 top-1 kernel."""
+
+import jax.numpy as jnp
+
+
+def l2_top1_ref(queries, centroids):
+    d = (
+        jnp.sum(queries.astype(jnp.float32) ** 2, 1, keepdims=True)
+        - 2.0 * queries.astype(jnp.float32) @ centroids.astype(jnp.float32).T
+        + jnp.sum(centroids.astype(jnp.float32) ** 2, 1)[None]
+    )
+    return jnp.argmin(d, 1).astype(jnp.int32), jnp.min(d, 1)

@@ -1,0 +1,19 @@
+"""Jitted public wrapper for the PQ ADC kernel (pads N to the block size)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import BLOCK_N, pq_adc_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
+def pq_adc(codes, lut, block_n: int = BLOCK_N, interpret: bool = True):
+    """codes (N, m) any int dtype, lut (m, ksub) f32 -> (N,) f32."""
+    n = codes.shape[0]
+    pad = (-n) % block_n
+    codes = jnp.pad(codes.astype(jnp.int32), ((0, pad), (0, 0)))
+    out = pq_adc_pallas(codes, lut.astype(jnp.float32),
+                        block_n=block_n, interpret=interpret)
+    return out[:n]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the PQ ADC kernel."""
+
+import jax.numpy as jnp
+
+
+def pq_adc_ref(codes: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
+    """codes (N, m) int, lut (m, ksub) f32 -> (N,) f32 distances."""
+    m = codes.shape[1]
+    cols = [lut[j][codes[:, j]] for j in range(m)]
+    return jnp.stack(cols, axis=0).sum(axis=0).astype(jnp.float32)

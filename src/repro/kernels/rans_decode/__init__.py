@@ -1,0 +1,4 @@
+from .ops import make_tables, rans_decode
+from .ref import rans_decode_ref
+
+__all__ = ["rans_decode", "rans_decode_ref", "make_tables"]

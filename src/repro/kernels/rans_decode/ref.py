@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the interleaved rANS decoder (same math, lax.scan)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def rans_decode_ref(heads, words, sym_t, freq_t, start_t, rows: int, r: int):
+    mask = jnp.uint32((1 << r) - 1)
+    low = jnp.uint32(1 << 16)
+
+    def step(carry, _):
+        heads, ptr = carry
+        cf = heads & mask
+        sym = sym_t[cf.astype(jnp.int32)]
+        f = freq_t[cf.astype(jnp.int32)].astype(jnp.uint32)
+        c = start_t[cf.astype(jnp.int32)].astype(jnp.uint32)
+        heads = f * (heads >> jnp.uint32(r)) + cf - c
+        need = heads < low
+        k = jnp.cumsum(need.astype(jnp.int32)) - need.astype(jnp.int32)
+        w = words[ptr + k].astype(jnp.uint32)
+        heads = jnp.where(need, (heads << jnp.uint32(16)) | w, heads)
+        ptr = ptr + need.sum(dtype=jnp.int32)
+        return (heads, ptr), sym
+
+    (_, _), syms = jax.lax.scan(step, (heads, jnp.int32(0)), None, length=rows)
+    return syms

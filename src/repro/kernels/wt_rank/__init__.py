@@ -1,0 +1,4 @@
+from .ops import pack_bits_u32, wt_rank
+from .ref import wt_rank_ref
+
+__all__ = ["wt_rank", "wt_rank_ref", "pack_bits_u32"]

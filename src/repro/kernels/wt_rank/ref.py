@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for batched bitvector rank."""
+
+import jax.numpy as jnp
+
+
+def wt_rank_ref(bits: jnp.ndarray, queries: jnp.ndarray) -> jnp.ndarray:
+    """bits (N,) 0/1; queries (Q,) positions -> #ones in [0, q)."""
+    cum = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                           jnp.cumsum(bits.astype(jnp.int32))])
+    return cum[queries]

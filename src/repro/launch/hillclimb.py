@@ -1,0 +1,78 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""§Perf hillclimb driver for the three selected cells.
+
+Runs the unrolled cost probes under controlled variants and writes the
+before/after table to experiments/results/hillclimb.json:
+
+  * qwen2-72b x train_4k:     remat_policy full vs dots (#3)
+  * minitron-4b x prefill_32k and llama4-scout x prefill_32k:
+        current code (blocked attention #1 + heads-or-seq constraint #2)
+        vs the dense baseline (constraint & blocking disabled via the
+        attention module's threshold knob) — the "before" numbers are also
+        preserved in experiments/probe_log.txt from the pre-change sweep.
+"""
+
+import dataclasses
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import _lower_probe, probe_layer_pair
+from repro.launch.mesh import make_production_mesh
+
+
+def probe_total(cfg, shape_name: str):
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=False)
+    cfg1, l1, cfg2, l2 = probe_layer_pair(cfg)
+    c1 = _lower_probe(cfg1, shape, shape.kind, mesh)
+    c2 = _lower_probe(cfg2, shape, shape.kind, mesh)
+    scale = (cfg.n_layers - l1) / (l2 - l1)
+    return [a + scale * (b - a) for a, b in zip(c1, c2)]
+
+
+def main():
+    out = {}
+    from repro.models import attention as A
+
+    # --- #1/#2: blocked attention + sharding constraint (prefill cells) ---
+    for arch in ("minitron-4b", "llama4-scout-17b-a16e"):
+        cfg = get_config(arch)
+        new = probe_total(cfg, "prefill_32k")
+        thr = A._BLOCK_THRESHOLD
+        A._BLOCK_THRESHOLD = 1 << 30        # disable blocking+constraint
+        try:
+            old = probe_total(cfg, "prefill_32k")
+        finally:
+            A._BLOCK_THRESHOLD = thr
+        out[f"{arch}__prefill_32k"] = {
+            "dense_baseline": {"flops": old[0], "bytes": old[1], "coll": old[2]},
+            "blocked+constraint": {"flops": new[0], "bytes": new[1], "coll": new[2]},
+            "collective_reduction": old[2] / max(1.0, new[2]),
+        }
+        print(json.dumps(out[f"{arch}__prefill_32k"], indent=1), flush=True)
+
+    # --- #3: remat policy (qwen2-72b train) -------------------------------
+    cfg = get_config("qwen2-72b")
+    full = probe_total(cfg, "train_4k")
+    dots = probe_total(dataclasses.replace(cfg, remat_policy="dots"), "train_4k")
+    out["qwen2-72b__train_4k"] = {
+        "remat_full": {"flops": full[0], "bytes": full[1], "coll": full[2]},
+        "remat_dots": {"flops": dots[0], "bytes": dots[1], "coll": dots[2]},
+        "flops_reduction": full[0] / max(1.0, dots[0]),
+    }
+    print(json.dumps(out["qwen2-72b__train_4k"], indent=1), flush=True)
+
+    path = Path(__file__).resolve().parents[3] / "experiments" / "results" / "hillclimb.json"
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(out, indent=1))
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

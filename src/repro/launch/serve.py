@@ -1,0 +1,101 @@
+"""Serving driver: batched LM decode + compressed retrieval side-car.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
+        --batch 8 --prompt-len 32 --gen 32
+
+Runs prefill (full-sequence forward) then jit'd one-token decode steps
+against the KV cache — the same ``serve_step`` the dry-run lowers for the
+decode_32k / long_500k shapes — and reports tokens/s.  With --retrieval it
+also mounts a RetrievalIndex and interleaves a kNN lookup per generated
+token (the paper's feature in the serving loop).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import build
+from repro.train.step import make_serve_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--retrieval", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    model, serve_step = make_serve_step(cfg)
+    jit_decode = jax.jit(serve_step, donate_argnums=(1,))
+
+    params = model.init(jax.random.PRNGKey(0))
+    max_len = args.prompt_len + args.gen
+    cache_kw = {"mem_len": args.prompt_len} if cfg.encoder_decoder else {}
+    cache = model.init_cache(args.batch, max_len, dtype=jnp.float32, **cache_kw)
+
+    rng = np.random.default_rng(0)
+    if cfg.encoder_decoder:
+        from repro.models.encdec import encdec_prefill_memory
+
+        frames = jnp.asarray(rng.standard_normal(
+            (args.batch, args.prompt_len, cfg.d_model)), jnp.float32)
+        cache = encdec_prefill_memory(params, cfg, frames, cache)
+        tok = jnp.zeros((args.batch, 1), jnp.int32)
+    elif cfg.frontend == "vision":
+        tok = None
+    else:
+        # prefill by feeding prompt tokens one at a time (decode path); a
+        # production server uses the prefill_step — kept simple here
+        prompt = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len))
+        for i in range(args.prompt_len):
+            inputs = {"token": jnp.asarray(prompt[:, i:i + 1], jnp.int32)}
+            tok, cache = jit_decode(params, cache, inputs)
+        tok = tok[:, None].astype(jnp.int32)
+
+    ri = None
+    if args.retrieval:
+        from repro.data.synthetic import make_dataset
+        from repro.retrieval.index import RetrievalIndex
+
+        base, _ = make_dataset("deep-like", 20_000, 10)
+        ri = RetrievalIndex(nlist=64, id_codec="roc").build(base)
+        print(f"[serve] retrieval side-car: "
+              f"{ri.stats()['bits_per_id']:.2f} bits/id")
+
+    steps = 0
+    t0 = time.perf_counter()
+    generated = []
+    for _ in range(args.gen):
+        if cfg.frontend == "vision":
+            inputs = {"embedding": jnp.asarray(
+                rng.standard_normal((args.batch, 1, cfg.d_model)), jnp.float32)}
+        else:
+            inputs = {"token": tok}
+        nxt, cache = jit_decode(params, cache, inputs)
+        tok = nxt[:, None].astype(jnp.int32)
+        generated.append(np.asarray(nxt))
+        steps += 1
+        if ri is not None and steps % 8 == 0:
+            q = rng.standard_normal((args.batch, 96)).astype(np.float32)
+            ri.search(q, nprobe=4, topk=5)
+    wall = time.perf_counter() - t0
+    toks = steps * args.batch
+    print(f"[serve] {toks} tokens in {wall:.2f}s -> {toks/wall:,.0f} tok/s "
+          f"(batch {args.batch})")
+    return np.stack(generated)
+
+
+if __name__ == "__main__":
+    main()

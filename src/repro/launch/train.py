@@ -1,0 +1,109 @@
+"""Training driver: any --arch at any scale, fault-tolerant by default.
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmoe-1b-7b \
+        --reduced --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Features exercised end-to-end (CPU-sized via --reduced, production mesh via
+--mesh pod/multipod on the dry-run device fleet):
+  * jit'd train_step with the repo sharding rules,
+  * AdamW + cosine schedule, grad clipping,
+  * optional int8 error-feedback gradient compression (--compress-grads),
+  * checkpoint/restart: atomic saves every --ckpt-every, auto-resume from
+    LATEST (kill the process mid-run and re-launch to test),
+  * straggler/heartbeat hook: per-step wall-time watchdog that logs steps
+    exceeding --deadline x median (the single-process analogue of
+    skip-on-straggler at fleet scale).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import (latest_step, restore_checkpoint,
+                                         save_checkpoint)
+from repro.configs import get_config, reduced
+from repro.data.pipeline import TokenPipeline
+from repro.train.optim import AdamWConfig, init_opt
+from repro.train.step import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", default="auto", choices=["auto", "never"])
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--deadline", type=float, default=3.0,
+                    help="straggler threshold (x median step time)")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--stop-after", type=int, default=0,
+                    help="simulate a crash: exit after this many steps")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=max(1, args.steps // 20))
+    model, train_step = make_train_step(cfg, opt_cfg,
+                                        compress_grads=args.compress_grads)
+    jit_step = jax.jit(train_step, donate_argnums=(0, 1))
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = init_opt(params)
+    pipe = TokenPipeline(vocab=cfg.vocab_size, batch=args.batch,
+                         seq_len=args.seq, seed=0)
+
+    start = 0
+    if args.ckpt_dir and args.resume == "auto":
+        step0 = latest_step(args.ckpt_dir)
+        if step0 is not None:
+            (params, opt_state), manifest = restore_checkpoint(
+                args.ckpt_dir, (params, opt_state))
+            pipe.restore(manifest["extra"]["pipeline"])
+            start = manifest["step"]
+            print(f"[train] resumed from step {start}")
+
+    times = []
+    losses = []
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(step).items()}
+        t0 = time.perf_counter()
+        params, opt_state, metrics = jit_step(params, opt_state, batch)
+        metrics = jax.tree.map(float, metrics)
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        losses.append(metrics["loss"])
+        med = float(np.median(times[-50:]))
+        if len(times) > 5 and dt > args.deadline * med:
+            print(f"[straggler] step {step} took {dt:.3f}s (median {med:.3f}s)")
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {metrics['loss']:.4f} "
+                  f"ce {metrics['ce']:.4f} gnorm {metrics['grad_norm']:.3f} "
+                  f"lr {metrics['lr']:.2e} {dt*1e3:.0f}ms", flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            pipe.step = step + 1
+            save_checkpoint(Path(args.ckpt_dir), step + 1, (params, opt_state),
+                            extra={"pipeline": pipe.state()})
+        if args.stop_after and step + 1 >= args.stop_after:
+            print(f"[train] simulated crash after step {step + 1}")
+            return losses
+    print(f"[train] done: loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({np.mean(times[1:])*1e3:.0f} ms/step)")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .model import Model, build, count_params, decode_input_specs, input_specs, model_flops
+
+__all__ = ["Model", "build", "count_params", "decode_input_specs", "input_specs", "model_flops"]

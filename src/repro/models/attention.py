@@ -1,0 +1,258 @@
+"""GQA attention with RoPE/M-RoPE, sliding windows, and KV caches.
+
+Three entry points:
+  * ``attend``       — full-sequence (training / prefill), causal or not,
+                       optional sliding window;
+  * ``decode_attend`` — one-step decode against a (batch, S, kv, hd) cache;
+  * ``init_cache`` / cache update helpers.
+
+Shapes: q (B, S, H, D); k/v (B, S, KV, D) with H % KV == 0 (GQA groups).
+Softmax in f32.  Sequence-sharded decode (flash-decoding-style partial
+softmax) lives in ``repro.distributed.sp`` and is a hillclimb variant.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, init_dense, mrope, rope
+
+__all__ = [
+    "init_attention",
+    "attention",
+    "decode_attention",
+    "init_cache",
+    "KVCache",
+]
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray     # (B, S_max, KV, D)
+    v: jnp.ndarray     # (B, S_max, KV, D)
+    length: jnp.ndarray  # scalar int32: tokens already cached
+
+
+def init_attention(key, cfg):
+    hd = cfg.head_dim_
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(kq, cfg.d_model, cfg.n_heads * hd, bias=cfg.qkv_bias),
+        "wk": init_dense(kk, cfg.d_model, cfg.n_kv_heads * hd, bias=cfg.qkv_bias),
+        "wv": init_dense(kv, cfg.d_model, cfg.n_kv_heads * hd, bias=cfg.qkv_bias),
+        "wo": init_dense(ko, cfg.n_heads * hd, cfg.d_model),
+    }
+
+
+def _project_qkv(params, x, cfg):
+    B, S, _ = x.shape
+    hd = cfg.head_dim_
+    q = dense(params["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    k = dense(params["wk"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    v = dense(params["wv"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def _apply_rope(q, k, positions, cfg):
+    if cfg.mrope_sections is not None:
+        # positions: (3, B, S)
+        q = mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    elif positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def _sdpa(q, k, v, mask, cfg):
+    """q (B,S,H,D), k/v (B,T,KV,D) -> (B,S,H,D); GQA via head grouping."""
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, D)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(D).astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask, scores, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, H, D)
+
+
+_BLOCK_Q = 1024
+_BLOCK_KV = 1024
+_BLOCK_THRESHOLD = 2048  # sequences beyond this use the blocked path
+
+
+def _sdpa_blocked(q, k, v, cfg, causal: bool, window: int = 0):
+    """Flash-style blocked attention: online softmax over KV chunks inside a
+    scan over Q chunks — never materializes the (S, T) score matrix.
+
+    §Perf hillclimb #1: the dense reference path materializes
+    B*H*S*T f32 scores (200+ GB/device at 32k prefill) and, when head_dim is
+    model-sharded, all-reduces them.  The blocked path caps live scores at
+    (B, H, BLOCK_Q, BLOCK_KV) and composes with the head/sequence sharding
+    constraint (hillclimb #2, ``_constrain_heads_or_seq``).
+    """
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(_BLOCK_Q, S)
+    bkv = min(_BLOCK_KV, T)
+    nq, nkv = -(-S // bq), -(-T // bkv)
+    pad_q, pad_kv = nq * bq - S, nkv * bkv - T
+    qg = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))).reshape(
+        B, nq, bq, KV, G, D).transpose(1, 0, 2, 3, 4, 5)  # (nq,B,bq,KV,G,D)
+    kp = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0))).reshape(
+        B, nkv, bkv, KV, D)
+    vp = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0))).reshape(
+        B, nkv, bkv, KV, D)
+    q_off = T - S  # causal alignment for prefill-style q suffixes
+    neg = jnp.float32(jnp.finfo(jnp.float32).min)
+
+    def per_q_chunk(qi, qblk):
+        qpos = qi * bq + jnp.arange(bq) + q_off            # (bq,)
+
+        def inner(carry, inputs):
+            kj, kblk, vblk = inputs
+            kpos = kj * bkv + jnp.arange(bkv)              # (bkv,)
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qblk, kblk).astype(jnp.float32)
+            s = s / jnp.sqrt(D).astype(jnp.float32)
+            m_ok = kpos[None, :] < T                       # kv padding
+            if causal:
+                m_ok &= kpos[None, :] <= qpos[:, None]
+            if window:
+                m_ok &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(m_ok[None, None, None], s, neg)
+            acc, m, l = carry
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            scale = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * scale + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(qblk.dtype), vblk)
+            acc = acc * scale[..., None].astype(acc.dtype) + pv
+            return (acc, m_new, l), None
+
+        init = (
+            jnp.zeros((B, KV, G, bq, D), qblk.dtype),
+            jnp.full((B, KV, G, bq), neg),
+            jnp.zeros((B, KV, G, bq), jnp.float32),
+        )
+        (acc, m, l), _ = jax.lax.scan(
+            inner, init,
+            (jnp.arange(nkv), kp.transpose(1, 0, 2, 3, 4),
+             vp.transpose(1, 0, 2, 3, 4)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, bq, H, D)
+
+    outs = jax.lax.map(lambda args: per_q_chunk(*args),
+                       (jnp.arange(nq), qg))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nq * bq, H, D)
+    return out[:, :S]
+
+
+def _constrain_heads_or_seq(x, cfg, seq_axis: int = 1, head_axis: int = 2):
+    """§Perf hillclimb #2: attention activation sharding constraint.
+
+    If the head count divides the model axis, shard heads; otherwise shard
+    the *query sequence* on the model axis (context-parallel attention with
+    gathered KV).  The fallback of sharding head_dim (what the propagation
+    picks by default from the weight layouts) makes XLA all-reduce the full
+    score tensor — ~5e11 B/layer at 32k prefill for minitron-4b, measured in
+    EXPERIMENTS.md §Perf.  No-op off-mesh (CPU tests).
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or "model" not in getattr(mesh, "shape", {}):
+        return x
+    tp = mesh.shape["model"]
+    spec = [None] * x.ndim
+    if x.shape[head_axis] % tp == 0:
+        spec[head_axis] = "model"
+    elif x.shape[seq_axis] % tp == 0:
+        spec[seq_axis] = "model"
+    else:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def _causal_mask(S: int, T: int, window: int = 0):
+    """(1,1,1,S,T) boolean mask; T >= S, aligned at the end (prefill)."""
+    qi = jnp.arange(S)[:, None] + (T - S)
+    ki = jnp.arange(T)[None, :]
+    m = ki <= qi
+    if window:
+        m &= ki > qi - window
+    return m[None, None, None]
+
+
+def attention(
+    params,
+    x,
+    positions,
+    cfg,
+    causal: bool = True,
+    window: int = 0,
+) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, x, cfg)
+    q, k = _apply_rope(q, k, positions, cfg)
+    if S > _BLOCK_THRESHOLD:
+        q = _constrain_heads_or_seq(q, cfg)
+        out = _sdpa_blocked(q, k, v, cfg, causal=causal, window=window)
+        out = _constrain_heads_or_seq(out, cfg)
+    else:
+        mask = _causal_mask(S, S, window) if causal else None
+        out = _sdpa(q, k, v, mask, cfg)
+    return dense(params["wo"], out.reshape(B, S, -1))
+
+
+def init_cache(batch: int, max_len: int, cfg, dtype=jnp.bfloat16) -> KVCache:
+    hd = cfg.head_dim_
+    shape = (batch, max_len, cfg.n_kv_heads, hd)
+    return KVCache(
+        k=jnp.zeros(shape, dtype),
+        v=jnp.zeros(shape, dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def decode_attention(
+    params,
+    x,
+    cache: KVCache,
+    cfg,
+    window: int = 0,
+):
+    """One-token decode: x (B, 1, d); returns (y, new_cache).
+
+    The cache holds ``length`` valid tokens; the new token is written at
+    ``length`` (or at ``length % window`` ring position for windowed
+    layers, which keeps the cache O(window) for gemma3-style local
+    attention at 500k contexts).
+    """
+    B, S, _ = x.shape
+    assert S == 1, "decode_attention is one token at a time"
+    pos = cache.length[None, None]  # (1,1) broadcasting as positions
+    q, k, v = _project_qkv(params, x, cfg)
+    if cfg.mrope_sections is not None:
+        pos3 = jnp.broadcast_to(pos, (3, B, 1) if pos.ndim == 2 else pos.shape)
+        q, k = _apply_rope(q, k, pos3, cfg)
+    else:
+        q, k = _apply_rope(q, k, jnp.broadcast_to(pos, (B, 1)), cfg)
+    T = cache.k.shape[1]
+    slot = jnp.where(window > 0, cache.length % jnp.int32(max(1, window)),
+                     cache.length) if window else cache.length
+    ck = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0))
+    # valid-position mask: positions < length+1 (ring buffers are always full
+    # once length >= window, and slots beyond are masked before that)
+    ki = jnp.arange(T)[None, None, None, None, :]
+    valid = ki <= jnp.minimum(cache.length, T - 1)
+    out = _sdpa(q, ck, cv, valid, cfg)
+    y = dense(params["wo"], out.reshape(B, 1, -1))
+    return y, KVCache(k=ck, v=cv, length=cache.length + 1)

@@ -1,0 +1,227 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the assignment, the conv frame frontend is a STUB: ``input_specs``
+provides precomputed frame embeddings (B, S_enc, d_model).  The encoder is
+a bidirectional transformer; the decoder adds cross-attention over the
+encoder memory.  Decode shapes cache (a) decoder self-attention KV and
+(b) the projected encoder memory KV (computed once at prefill).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import KVCache, attention, decode_attention, init_attention, init_cache
+from .layers import (
+    dense,
+    embed,
+    init_dense,
+    init_embedding,
+    init_mlp,
+    init_rms_norm,
+    mlp,
+    rms_norm,
+    unembed,
+)
+
+__all__ = ["init_encdec", "encdec_apply", "encdec_encode", "encdec_decode",
+           "init_encdec_cache", "dec_len_for"]
+
+
+def _remat_policy(cfg):
+    """Remat policy from the config (§Perf hillclimb #3)."""
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def dec_len_for(seq_len: int) -> int:
+    """Decoder length for training shapes: seq/4 (frames >> tokens)."""
+    return max(1, seq_len // 4)
+
+
+def _init_cross(key, cfg):
+    hd = cfg.head_dim_
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(kq, cfg.d_model, cfg.n_heads * hd),
+        "wk": init_dense(kk, cfg.d_model, cfg.n_kv_heads * hd),
+        "wv": init_dense(kv, cfg.d_model, cfg.n_kv_heads * hd),
+        "wo": init_dense(ko, cfg.n_heads * hd, cfg.d_model),
+    }
+
+
+def _cross_kv(params, memory, cfg):
+    B, T, _ = memory.shape
+    hd = cfg.head_dim_
+    k = dense(params["wk"], memory).reshape(B, T, cfg.n_kv_heads, hd)
+    v = dense(params["wv"], memory).reshape(B, T, cfg.n_kv_heads, hd)
+    return k, v
+
+
+def _cross_attend(params, x, mem_k, mem_v, cfg):
+    from .attention import _BLOCK_THRESHOLD, _sdpa, _sdpa_blocked
+
+    B, S, _ = x.shape
+    hd = cfg.head_dim_
+    q = dense(params["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    if mem_k.shape[1] > _BLOCK_THRESHOLD and S > 1:
+        out = _sdpa_blocked(q, mem_k, mem_v, cfg, causal=False)
+    else:
+        out = _sdpa(q, mem_k, mem_v, None, cfg)
+    return dense(params["wo"], out.reshape(B, S, -1))
+
+
+def _init_enc_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rms_norm(cfg.d_model),
+        "attn": init_attention(k1, cfg),
+        "ln2": init_rms_norm(cfg.d_model),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _init_dec_block(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": init_rms_norm(cfg.d_model),
+        "self_attn": init_attention(k1, cfg),
+        "ln_x": init_rms_norm(cfg.d_model),
+        "cross": _init_cross(k2, cfg),
+        "ln2": init_rms_norm(cfg.d_model),
+        "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig) -> Dict[str, Any]:
+    ke, kd, kt = jax.random.split(key, 3)
+    enc_keys = jax.random.split(ke, cfg.n_encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "embed": init_embedding(kt, cfg.padded_vocab, cfg.d_model),
+        "enc_blocks": jax.vmap(lambda k: _init_enc_block(k, cfg))(enc_keys),
+        "enc_norm": init_rms_norm(cfg.d_model),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_block(k, cfg))(dec_keys),
+        "final_norm": init_rms_norm(cfg.d_model),
+    }
+
+
+def encdec_encode(params, cfg, frames, remat: bool = True,
+                  unroll: bool = False):
+    """frames (B, S_enc, d_model) -> encoder memory."""
+    B, S, _ = frames.shape
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(h, p):
+        a = attention(p["attn"], rms_norm(p["ln1"], h, cfg.norm_eps),
+                      positions, cfg, causal=False)
+        h = h + a
+        return h + mlp(p["mlp"], rms_norm(p["ln2"], h, cfg.norm_eps)), None
+
+    if remat:
+        body = jax.checkpoint(body, policy=_remat_policy(cfg),
+                              prevent_cse=False)
+    if unroll:
+        for i in range(cfg.n_encoder_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], params["enc_blocks"]))
+    else:
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return rms_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def encdec_apply(params, cfg, frames, dec_tokens, remat: bool = True,
+                 unroll: bool = False):
+    """Training/prefill forward -> (logits (B, S_dec, V), aux 0)."""
+    memory = encdec_encode(params, cfg, frames, remat=remat, unroll=unroll)
+    B, S = dec_tokens.shape
+    x = embed(params["embed"], dec_tokens).astype(jnp.dtype(cfg.dtype))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(h, p):
+        a = attention(p["self_attn"], rms_norm(p["ln1"], h, cfg.norm_eps),
+                      positions, cfg, causal=True)
+        h = h + a
+        mk, mv = _cross_kv(p["cross"], memory, cfg)
+        h = h + _cross_attend(p["cross"], rms_norm(p["ln_x"], h, cfg.norm_eps),
+                              mk, mv, cfg)
+        return h + mlp(p["mlp"], rms_norm(p["ln2"], h, cfg.norm_eps)), None
+
+    if remat:
+        body = jax.checkpoint(body, policy=_remat_policy(cfg),
+                              prevent_cse=False)
+    if unroll:
+        for i in range(cfg.n_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], params["dec_blocks"]))
+    else:
+        x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return unembed(params["embed"], x), jnp.zeros((), jnp.float32)
+
+
+class EncDecCache(NamedTuple):
+    self_kv: Any          # stacked per-layer KVCache
+    mem_k: jnp.ndarray    # (L, B, T, KV, hd) projected encoder memory
+    mem_v: jnp.ndarray
+
+
+def init_encdec_cache(batch: int, max_len: int, cfg, dtype=jnp.bfloat16,
+                      mem_len: int | None = None) -> EncDecCache:
+    mem_len = mem_len or max_len
+    hd = cfg.head_dim_
+    L = cfg.n_layers
+    kv = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[init_cache(batch, max_len, cfg, dtype) for _ in range(L)])
+    shape = (L, batch, mem_len, cfg.n_kv_heads, hd)
+    return EncDecCache(
+        self_kv=kv,
+        mem_k=jnp.zeros(shape, dtype),
+        mem_v=jnp.zeros(shape, dtype),
+    )
+
+
+def encdec_prefill_memory(params, cfg, frames, cache: EncDecCache) -> EncDecCache:
+    """Run the encoder once and stash per-layer projected cross KV."""
+    memory = encdec_encode(params, cfg, frames, remat=False)
+
+    def proj(p):
+        return _cross_kv({"wk": p["cross"]["wk"], "wv": p["cross"]["wv"]},
+                         memory, cfg)
+
+    mk, mv = jax.vmap(proj)(params["dec_blocks"])
+    return cache._replace(mem_k=mk.astype(cache.mem_k.dtype),
+                          mem_v=mv.astype(cache.mem_v.dtype))
+
+
+def encdec_decode(params, cfg, cache: EncDecCache, token,
+                  unroll: bool = False):
+    """One decoder token step against cached self-KV + encoder memory."""
+    x = embed(params["embed"], token).astype(jnp.dtype(cfg.dtype))
+
+    def body(h, pc):
+        p, kv, mk, mv = pc
+        a, kv = decode_attention(p["self_attn"],
+                                 rms_norm(p["ln1"], h, cfg.norm_eps), kv, cfg)
+        h = h + a
+        h = h + _cross_attend(p["cross"], rms_norm(p["ln_x"], h, cfg.norm_eps),
+                              mk, mv, cfg)
+        h = h + mlp(p["mlp"], rms_norm(p["ln2"], h, cfg.norm_eps))
+        return h, kv
+
+    xs = (params["dec_blocks"], cache.self_kv, cache.mem_k, cache.mem_v)
+    if unroll:
+        outs = []
+        for i in range(cfg.n_layers):
+            x, kv_i = body(x, jax.tree.map(lambda a: a[i], xs))
+            outs.append(kv_i)
+        new_kv = jax.tree.map(lambda *ys: jnp.stack(ys), *outs)
+    else:
+        x, new_kv = jax.lax.scan(body, x, xs)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return unembed(params["embed"], x), cache._replace(self_kv=new_kv)

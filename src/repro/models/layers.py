@@ -1,0 +1,149 @@
+"""Shared neural layers: norms, MLPs, embeddings, RoPE/M-RoPE.
+
+Pure-functional JAX: params are nested dicts of jnp arrays; every layer is
+``init(key, cfg) -> params`` + ``apply(params, x, ...) -> y``.  Weight
+layouts follow the (in_dim, ..., out_dim) convention that the sharding
+rules in ``repro.distributed.sharding`` key off of (see leaf names there).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "rms_norm",
+    "layer_norm",
+    "init_dense",
+    "dense",
+    "init_mlp",
+    "mlp",
+    "init_embedding",
+    "embed",
+    "unembed",
+    "rope",
+    "mrope",
+    "rope_freqs",
+]
+
+
+def _he(key, shape, in_axis_size, dtype=jnp.float32):
+    scale = 1.0 / np.sqrt(max(1, in_axis_size))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# -- norms -------------------------------------------------------------------
+
+def rms_norm(params, x, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def init_rms_norm(d: int):
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def layer_norm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(x.dtype)
+
+
+def init_layer_norm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+# -- dense -------------------------------------------------------------------
+
+def init_dense(key, d_in: int, d_out: int, bias: bool = False):
+    p = {"kernel": _he(key, (d_in, d_out), d_in)}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense(params, x):
+    y = x @ params["kernel"].astype(x.dtype)
+    if "bias" in params:
+        y = y + params["bias"].astype(x.dtype)
+    return y
+
+
+# -- gated MLP (SwiGLU) --------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": {"kernel": _he(k1, (d_model, d_ff), d_model)},
+        "wi_up": {"kernel": _he(k2, (d_model, d_ff), d_model)},
+        "wo": {"kernel": _he(k3, (d_ff, d_model), d_ff)},
+    }
+
+
+def mlp(params, x):
+    g = dense(params["wi_gate"], x)
+    u = dense(params["wi_up"], x)
+    return dense(params["wo"], jax.nn.silu(g) * u)
+
+
+# -- embeddings ----------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int):
+    return {"table": _he(key, (vocab, d_model), d_model)}
+
+
+def embed(params, tokens):
+    return params["table"][tokens]
+
+
+def unembed(params, x):
+    """Tied or separate logits projection: x @ table^T."""
+    return x @ params["table"].T.astype(x.dtype)
+
+
+# -- rotary position embedding ---------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def _rotate(x, sin, cos):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    freqs = rope_freqs(x.shape[-1], theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    sin = jnp.sin(ang)[..., None, :]  # broadcast over heads
+    cos = jnp.cos(ang)[..., None, :]
+    return _rotate(x.astype(jnp.float32), sin, cos).astype(x.dtype)
+
+
+def mrope(x, positions3, theta: float, sections: Tuple[int, int, int]):
+    """Multimodal RoPE (qwen2-vl): head_dim halves split into (t, h, w)
+    sections, each rotated with its own position stream.
+
+    x: (..., seq, heads, head_dim); positions3: (3, ..., seq).
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, "mrope sections must cover head_dim/2"
+    freqs = rope_freqs(x.shape[-1], theta)  # (half,)
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=half
+    )  # static
+    # pick the position stream per frequency slot
+    pos = jnp.take(positions3, sec_id, axis=0)  # (half, ..., seq) -> move axis
+    pos = jnp.moveaxis(pos, 0, -1)  # (..., seq, half)
+    ang = pos.astype(jnp.float32) * freqs
+    sin = jnp.sin(ang)[..., None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    return _rotate(x.astype(jnp.float32), sin, cos).astype(x.dtype)

@@ -1,0 +1,138 @@
+"""Unified model facade: build(cfg) -> Model(init/apply/decode/cache/specs).
+
+``input_specs(cfg, shape, kind)`` returns ShapeDtypeStruct stand-ins for
+every model input (the dry-run contract): tokens for text archs,
+precomputed frame/patch embeddings for the stubbed audio/vision frontends,
+3-stream positions for M-RoPE.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeSpec
+from . import encdec as _encdec
+from . import transformer as _tf
+
+__all__ = ["Model", "build", "input_specs", "count_params", "model_flops"]
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    apply: Callable[..., Any]          # (params, **batch) -> (logits, aux)
+    decode_step: Callable[..., Any]    # (params, cache, **inputs) -> (logits, cache)
+    init_cache: Callable[..., Any]     # (batch, max_len, dtype) -> cache
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.encoder_decoder:
+        def apply_fn(params, frames=None, dec_tokens=None, remat=True,
+                     unroll=False, **_):
+            return _encdec.encdec_apply(params, cfg, frames, dec_tokens,
+                                        remat=remat, unroll=unroll)
+
+        def decode_fn(params, cache, token=None, unroll=False, **_):
+            return _encdec.encdec_decode(params, cfg, cache, token, unroll=unroll)
+
+        def cache_fn(batch, max_len, dtype=jnp.bfloat16, mem_len=None):
+            return _encdec.init_encdec_cache(batch, max_len, cfg, dtype, mem_len)
+
+        return Model(cfg, lambda key: _encdec.init_encdec(key, cfg),
+                     apply_fn, decode_fn, cache_fn)
+
+    def apply_fn(params, tokens=None, embeddings=None, positions=None,
+                 remat=True, unroll=False, **_):
+        return _tf.decoder_apply(params, cfg, tokens=tokens,
+                                 embeddings=embeddings, positions=positions,
+                                 remat=remat, unroll=unroll)
+
+    def decode_fn(params, cache, token=None, embedding=None, unroll=False, **_):
+        return _tf.decoder_decode(params, cfg, cache, token=token,
+                                  embedding=embedding, unroll=unroll)
+
+    def cache_fn(batch, max_len, dtype=jnp.bfloat16, **_):
+        return _tf.init_decoder_cache(batch, max_len, cfg, dtype)
+
+    return Model(cfg, lambda key: _tf.init_decoder(key, cfg),
+                 apply_fn, decode_fn, cache_fn)
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Inputs for train/prefill; decode uses ``decode_input_specs``."""
+    B, S = shape.global_batch, shape.seq_len
+    f32 = jnp.dtype(cfg.dtype)
+    if cfg.encoder_decoder:
+        Sd = _encdec.dec_len_for(S)
+        return {
+            "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), f32),
+            "dec_tokens": jax.ShapeDtypeStruct((B, Sd), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, Sd), jnp.int32),
+        }
+    if cfg.frontend == "vision":
+        return {
+            "embeddings": jax.ShapeDtypeStruct((B, S, cfg.d_model), f32),
+            "positions": jax.ShapeDtypeStruct((3, B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    B = shape.global_batch
+    f32 = jnp.dtype(cfg.dtype)
+    if cfg.encoder_decoder:
+        return {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    if cfg.frontend == "vision":
+        return {"embedding": jax.ShapeDtypeStruct((B, 1, cfg.d_model), f32)}
+    return {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# parameter / FLOP accounting (for rooflines)
+# ---------------------------------------------------------------------------
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Exact count via eval_shape on init (no allocation)."""
+    model = build(cfg)
+    tree = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    total = 0
+    expert_extra = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        n = int(np.prod(leaf.shape))
+        total += n
+        names = "/".join(str(p) for p in path)
+        if "moe" in names and leaf.ndim >= 3 and leaf.shape[-3] == cfg.n_experts:
+            expert_extra += n
+    if active_only and cfg.n_experts:
+        k = cfg.experts_per_token
+        total -= expert_extra
+        total += int(expert_extra * k / cfg.n_experts)
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) per §Roofline."""
+    n = count_params(cfg, active_only=bool(cfg.n_experts))
+    if shape.kind == "decode":
+        tokens = shape.global_batch  # one new token per sequence
+    else:
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.encoder_decoder:
+            # decoder tokens carry the 6ND; encoder counted via its params
+            tokens = shape.global_batch * _encdec.dec_len_for(shape.seq_len)
+    if shape.kind == "train":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens  # inference: forward only

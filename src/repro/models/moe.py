@@ -1,0 +1,111 @@
+"""Mixture-of-Experts layer with static-shape sort-based dispatch.
+
+Megablocks-style routing without custom kernels, XLA/pjit friendly:
+
+  1. router logits -> top-k experts per token (+ softmax weights);
+  2. the (tokens*k) assignments are sorted by expert id (static shape);
+  3. each assignment's position *within its expert* comes from the sorted
+     order; assignments beyond the per-expert capacity C are dropped
+     (GShard-style accounting, capacity_factor configurable);
+  4. tokens are gathered into an (E, C, d) buffer, two einsums apply the
+     expert FFNs, and results scatter back weighted by router probs.
+
+Sharding: the (E, C, d) buffer shards E over the "model" mesh axis (expert
+parallelism) and C over "data"; the gather/scatter between token-sharded
+and expert-sharded layouts lowers to all-to-alls under pjit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _he, dense, init_dense
+
+__all__ = ["init_moe", "moe_apply", "moe_capacity"]
+
+
+def moe_capacity(n_tokens: int, cfg) -> int:
+    """Per-expert capacity with the configured slack factor."""
+    k = cfg.experts_per_token
+    c = int(cfg.capacity_factor * n_tokens * k / cfg.n_experts)
+    return max(8, min(c, n_tokens))
+
+
+def init_moe(key, cfg):
+    E, d, ff = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    kr, kg, ku, ko, ks = jax.random.split(key, 5)
+    p = {
+        "router": {"kernel": _he(kr, (d, E), d)},
+        "wi_gate": {"kernel": _he(kg, (E, d, ff), d)},
+        "wi_up": {"kernel": _he(ku, (E, d, ff), d)},
+        "wo": {"kernel": _he(ko, (E, ff, d), ff)},
+    }
+    if cfg.shared_expert:
+        from .layers import init_mlp
+
+        p["shared"] = init_mlp(ks, d, cfg.d_ff)
+    return p
+
+
+def moe_apply(params, x, cfg):
+    """x: (B, S, d) -> (B, S, d), plus aux load-balancing loss."""
+    B, S, d = x.shape
+    T = B * S
+    k = cfg.experts_per_token
+    E = cfg.n_experts
+    C = moe_capacity(T, cfg)
+    xt = x.reshape(T, d)
+
+    logits = dense(params["router"], xt).astype(jnp.float32)       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)                 # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9
+    )
+
+    # ---- sort assignments by expert --------------------------------------
+    flat_expert = expert_ids.reshape(-1)                            # (T*k,)
+    flat_token = jnp.repeat(jnp.arange(T), k)
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_expert)                                # stable enough
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+
+    # position within expert = index - start-of-expert (via counts cumsum)
+    counts = jnp.bincount(sorted_expert, length=E)                  # (E,)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_expert = jnp.arange(T * k) - starts[sorted_expert]
+    keep = pos_in_expert < C
+
+    # ---- gather to (E, C, d) ----------------------------------------------
+    slot = sorted_expert * C + jnp.where(keep, pos_in_expert, 0)
+    buf = jnp.zeros((E * C, d), xt.dtype)
+    buf = buf.at[jnp.where(keep, slot, E * C - 1)].add(
+        jnp.where(keep[:, None], xt[sorted_token], 0.0)
+    )
+    buf = buf.reshape(E, C, d)
+
+    # ---- expert FFNs (einsum over the expert dim) ---------------------------
+    g = jnp.einsum("ecd,edf->ecf", buf, params["wi_gate"]["kernel"].astype(buf.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, params["wi_up"]["kernel"].astype(buf.dtype))
+    h = jax.nn.silu(g) * u
+    out = jnp.einsum("ecf,efd->ecd", h, params["wo"]["kernel"].astype(buf.dtype))
+    out = out.reshape(E * C, d)
+
+    # ---- scatter back weighted ----------------------------------------------
+    gathered = out[jnp.where(keep, slot, 0)] * jnp.where(keep, sorted_gate, 0.0)[:, None].astype(out.dtype)
+    yt = jnp.zeros((T, d), x.dtype)
+    yt = yt.at[sorted_token].add(gathered.astype(x.dtype))
+
+    if cfg.shared_expert:
+        from .layers import mlp
+
+        yt = yt + mlp(params["shared"], xt)
+
+    # load-balancing aux loss (Switch-style): E * sum(frac_tokens * frac_prob)
+    frac_tokens = counts.astype(jnp.float32) / jnp.maximum(1, T * k)
+    frac_probs = probs.mean(axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return yt.reshape(B, S, d), aux

@@ -1,0 +1,177 @@
+"""Mamba2 (SSD) blocks + the zamba2 hybrid shared-attention wrapper.
+
+Training/prefill uses the chunked state-space-duality form (quadratic only
+within `chunk` and linear across chunks — the standard Mamba2 algorithm),
+decode uses the O(1) recurrent update on a carried (H, P, N) state.  The
+chunked einsums were written so the sequence dim can shard (long_500k).
+
+zamba2: a Mamba2 backbone where every ``hybrid_attn_every``-th layer is
+followed by a *shared* transformer block (one set of weights, applied at
+each hybrid point) with a per-use LoRA adapter — the paper's memory trick.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _he, dense, init_dense, init_rms_norm, rms_norm
+
+__all__ = [
+    "init_mamba",
+    "mamba_apply",
+    "mamba_decode",
+    "init_mamba_cache",
+    "MambaCache",
+    "ssd_chunked",
+]
+
+_CONV_K = 4
+_CHUNK = 256
+
+
+class MambaCache(NamedTuple):
+    state: jnp.ndarray      # (B, H, P, N) recurrent SSM state
+    conv: jnp.ndarray       # (B, CONV_K-1, conv_channels) rolling window
+
+
+def init_mamba(key, cfg):
+    d = cfg.d_model
+    d_in = cfg.d_inner
+    H = cfg.n_ssm_heads
+    N = cfg.ssm_state
+    conv_ch = d_in + 2 * N
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        # order: [z (d_in), x (d_in), B (N), C (N), dt (H)]
+        "in_proj": {"kernel": _he(k1, (d, 2 * d_in + 2 * N + H), d)},
+        "conv": {"kernel": _he(k2, (_CONV_K, conv_ch), _CONV_K)},
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "norm": init_rms_norm(d_in),
+        "out_proj": {"kernel": _he(k3, (d_in, d), d_in)},
+    }
+
+
+def _segsum(a):
+    """(..., q) log-decays -> (..., q, q) lower-triangular pairwise sums."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, a, B, C, init_state=None, chunk: int = _CHUNK):
+    """State-space-duality scan.
+
+    x: (b, l, h, p)   inputs (already dt-weighted)
+    a: (b, l, h)      per-step log decay (<= 0)
+    B: (b, l, n)      input projection (shared across heads, G=1)
+    C: (b, l, n)      output projection
+    returns y (b, l, h, p), final_state (b, h, p, n)
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, l)
+    assert l % chunk == 0, "sequence must divide the SSD chunk"
+    c = l // chunk
+    xr = x.reshape(b, c, chunk, h, p)
+    ar = a.reshape(b, c, chunk, h).transpose(0, 3, 1, 2)       # (b,h,c,q)
+    Br = B.reshape(b, c, chunk, n)
+    Cr = C.reshape(b, c, chunk, n)
+
+    a_cum = jnp.cumsum(ar, axis=-1)                            # (b,h,c,q)
+    # 1. intra-chunk (attention-like)
+    L = jnp.exp(_segsum(ar))                                   # (b,h,c,q,q)
+    Y_diag = jnp.einsum("bcqn,bcsn,bhcqs,bcshp->bcqhp", Cr, Br, L.astype(x.dtype), xr)
+    # 2. per-chunk final states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)            # (b,h,c,q)
+    states = jnp.einsum("bcqn,bhcq,bcqhp->bchpn", Br, decay_states.astype(x.dtype), xr)
+    # 3. inter-chunk recurrence (one segsum over chunk decays)
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), x.dtype)
+    chunk_decay = a_cum[..., -1]                               # (b,h,c)
+    padded = jnp.pad(chunk_decay, ((0, 0), (0, 0), (1, 0)))
+    decay_chunk = jnp.exp(_segsum(padded))                     # (b,h,c+1,c+1)
+    states_all = jnp.concatenate([init_state[:, None], states], axis=1)
+    # states_all: (b, c+1, h, p, n); combine with decay matrix rows
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk.astype(x.dtype), states_all)
+    prev_states, final_state = new_states[:, :-1], new_states[:, -1]
+    # 4. contribution of carried state to each position
+    state_decay = jnp.exp(a_cum)                               # (b,h,c,q)
+    Y_off = jnp.einsum("bcqn,bchpn,bhcq->bcqhp", Cr, prev_states, state_decay.astype(x.dtype))
+    y = (Y_diag + Y_off).reshape(b, l, h, p)
+    return y, final_state
+
+
+def _split_proj(params, u, cfg):
+    d_in = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.n_ssm_heads
+    zxbcdt = dense(params["in_proj"], u)
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in : 2 * d_in + 2 * N]
+    dt_raw = zxbcdt[..., 2 * d_in + 2 * N :]
+    return z, xBC, dt_raw, d_in, N, H
+
+
+def mamba_apply(params, u, cfg):
+    """Full-sequence Mamba2 mixer: u (B, L, d) -> (B, L, d)."""
+    Bb, L, _ = u.shape
+    z, xBC, dt_raw, d_in, N, H = _split_proj(params, u, cfg)
+    # causal depthwise conv over (x, B, C)
+    k = params["conv"]["kernel"].astype(xBC.dtype)             # (K, ch)
+    pad = jnp.pad(xBC, ((0, 0), (_CONV_K - 1, 0), (0, 0)))
+    conv = sum(pad[:, i : i + L] * k[i] for i in range(_CONV_K))
+    conv = jax.nn.silu(conv)
+    x = conv[..., :d_in].reshape(Bb, L, H, cfg.ssm_head_dim)
+    Bm = conv[..., d_in : d_in + N]
+    Cm = conv[..., d_in + N :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])   # (B,L,H)
+    A = -jnp.exp(params["A_log"])                              # (H,) negative
+    a = dt * A                                                 # log decay
+    y, _ = ssd_chunked((x * dt[..., None].astype(x.dtype)), a, Bm, Cm)
+    y = y + x * params["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(Bb, L, d_in)
+    y = rms_norm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return dense(params["out_proj"], y)
+
+
+def init_mamba_cache(batch: int, cfg, dtype=jnp.float32) -> MambaCache:
+    H, P, N = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_ch = cfg.d_inner + 2 * N
+    return MambaCache(
+        state=jnp.zeros((batch, H, P, N), dtype),
+        conv=jnp.zeros((batch, _CONV_K - 1, conv_ch), dtype),
+    )
+
+
+def mamba_decode(params, u, cache: MambaCache, cfg) -> Tuple[jnp.ndarray, MambaCache]:
+    """One-token recurrent step: u (B, 1, d)."""
+    Bb = u.shape[0]
+    z, xBC, dt_raw, d_in, N, H = _split_proj(params, u, cfg)
+    xBC = xBC[:, 0]                                            # (B, ch)
+    window = jnp.concatenate([cache.conv, xBC[:, None, :].astype(cache.conv.dtype)], axis=1)
+    k = params["conv"]["kernel"].astype(window.dtype)
+    conv = (window * k[None]).sum(axis=1)
+    conv = jax.nn.silu(conv)
+    x = conv[:, :d_in].reshape(Bb, H, cfg.ssm_head_dim)
+    Bm = conv[:, d_in : d_in + N]
+    Cm = conv[:, d_in + N :]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A)                                    # (B,H)
+    upd = (dt[..., None].astype(x.dtype) * x)[..., None] * Bm[:, None, None, :]
+    state = cache.state * decay[..., None, None].astype(cache.state.dtype) + upd.astype(cache.state.dtype)
+    y = jnp.einsum("bhpn,bn->bhp", state.astype(x.dtype), Cm)
+    y = y + x * params["D"].astype(x.dtype)[None, :, None]
+    y = y.reshape(Bb, 1, d_in)
+    y = rms_norm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    # keep the activation dtype stable across the residual stream (the cache
+    # is f32; without this cast decode carries would promote to f32)
+    out = dense(params["out_proj"], y.astype(u.dtype))
+    return out, MambaCache(state=state, conv=window[:, 1:])

@@ -1,0 +1,444 @@
+"""Decoder-stack assembly for all assigned families.
+
+Layer stacks are grouped into *segments* of identical repeating
+"super-blocks" and executed with ``lax.scan`` over stacked params — compile
+time is O(#distinct block bodies), not O(depth) (80-layer qwen2-72b lowers
+as one scanned body).  Heterogeneous patterns become super-blocks:
+
+    gemma3-1b   [(5 local + 1 global) x 4, local x 2]
+    zamba2-2.7b [(5 mamba + 1 mamba+shared-attn) x 9]   (shared weights + LoRA)
+    xlstm-1.3b  [(5 mLSTM + 1 sLSTM) x 8]
+    moe archs   [moe-block x L]
+    dense       [block x L]
+
+Decode threads a per-segment stacked cache through the same scans.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import (
+    KVCache,
+    attention,
+    decode_attention,
+    init_attention,
+    init_cache,
+)
+from .layers import (
+    _he,
+    dense,
+    embed,
+    init_dense,
+    init_embedding,
+    init_mlp,
+    init_rms_norm,
+    mlp,
+    rms_norm,
+    unembed,
+)
+from .moe import init_moe, moe_apply
+from .ssm import (
+    MambaCache,
+    init_mamba,
+    init_mamba_cache,
+    mamba_apply,
+    mamba_decode,
+)
+from .xlstm import (
+    MLstmCache,
+    SLstmCache,
+    init_mlstm,
+    init_mlstm_cache,
+    init_slstm,
+    init_slstm_cache,
+    mlstm_apply,
+    mlstm_decode,
+    slstm_apply,
+    slstm_decode,
+)
+
+__all__ = ["segments_for", "init_decoder", "decoder_apply", "decoder_decode",
+           "init_decoder_cache"]
+
+
+def _remat_policy(cfg):
+    """Remat policy from the config (§Perf hillclimb #3)."""
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+_LORA_RANK = 128
+
+
+# ---------------------------------------------------------------------------
+# segment layout
+# ---------------------------------------------------------------------------
+
+def segments_for(cfg: ModelConfig) -> List[Tuple[str, int, int]]:
+    """[(super_block_kind, n_iterations, layers_per_super), ...]."""
+    if cfg.family in ("dense",) and cfg.local_global_ratio:
+        per = cfg.local_global_ratio + 1
+        n_super = cfg.n_layers // per
+        rem = cfg.n_layers - n_super * per
+        segs = [("local_global", n_super, per)]
+        if rem:
+            segs.append(("local_only", rem, 1))
+        return segs
+    if cfg.family == "hybrid":
+        per = cfg.hybrid_attn_every
+        assert cfg.n_layers % per == 0
+        return [("mamba_hybrid", cfg.n_layers // per, per)]
+    if cfg.family == "ssm" and cfg.mlstm_slstm_pattern:
+        per = cfg.mlstm_slstm_pattern + 1
+        assert cfg.n_layers % per == 0
+        return [("xlstm_super", cfg.n_layers // per, per)]
+    if cfg.family == "moe":
+        return [("moe_block", cfg.n_layers, 1)]
+    return [("dense_block", cfg.n_layers, 1)]
+
+
+# ---------------------------------------------------------------------------
+# single blocks
+# ---------------------------------------------------------------------------
+
+def _init_dense_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rms_norm(cfg.d_model),
+        "attn": init_attention(k1, cfg),
+        "ln2": init_rms_norm(cfg.d_model),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _dense_block(params, x, positions, cfg, window: int = 0):
+    h = x + attention(params["attn"], rms_norm(params["ln1"], x, cfg.norm_eps),
+                      positions, cfg, window=window)
+    return h + mlp(params["mlp"], rms_norm(params["ln2"], h, cfg.norm_eps))
+
+
+def _dense_block_decode(params, x, cache: KVCache, cfg, window: int = 0):
+    a, cache = decode_attention(
+        params["attn"], rms_norm(params["ln1"], x, cfg.norm_eps), cache, cfg,
+        window=window)
+    h = x + a
+    return h + mlp(params["mlp"], rms_norm(params["ln2"], h, cfg.norm_eps)), cache
+
+
+def _init_moe_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rms_norm(cfg.d_model),
+        "attn": init_attention(k1, cfg),
+        "ln2": init_rms_norm(cfg.d_model),
+        "moe": init_moe(k2, cfg),
+    }
+
+
+def _moe_block(params, x, positions, cfg):
+    h = x + attention(params["attn"], rms_norm(params["ln1"], x, cfg.norm_eps),
+                      positions, cfg)
+    y, aux = moe_apply(params["moe"], rms_norm(params["ln2"], h, cfg.norm_eps), cfg)
+    return h + y, aux
+
+
+def _moe_block_decode(params, x, cache: KVCache, cfg):
+    a, cache = decode_attention(
+        params["attn"], rms_norm(params["ln1"], x, cfg.norm_eps), cache, cfg)
+    h = x + a
+    y, _ = moe_apply(params["moe"], rms_norm(params["ln2"], h, cfg.norm_eps), cfg)
+    return h + y, cache
+
+
+def _init_mamba_block(key, cfg):
+    return {"ln": init_rms_norm(cfg.d_model), "mixer": init_mamba(key, cfg)}
+
+
+def _mamba_block(params, x, cfg):
+    return x + mamba_apply(params["mixer"], rms_norm(params["ln"], x, cfg.norm_eps), cfg)
+
+
+def _mamba_block_decode(params, x, cache: MambaCache, cfg):
+    y, cache = mamba_decode(params["mixer"], rms_norm(params["ln"], x, cfg.norm_eps),
+                            cache, cfg)
+    return x + y, cache
+
+
+# ---------------------------------------------------------------------------
+# super-blocks (params for one scan iteration)
+# ---------------------------------------------------------------------------
+
+def _init_super(key, kind: str, cfg, per: int):
+    ks = jax.random.split(key, per + 1)
+    if kind == "dense_block":
+        return _init_dense_block(ks[0], cfg)
+    if kind == "local_only":
+        return _init_dense_block(ks[0], cfg)
+    if kind == "moe_block":
+        return _init_moe_block(ks[0], cfg)
+    if kind == "local_global":
+        return {
+            "locals": jax.vmap(lambda k: _init_dense_block(k, cfg))(
+                jnp.stack(ks[: per - 1])),
+            "global": _init_dense_block(ks[per - 1], cfg),
+        }
+    if kind == "mamba_hybrid":
+        p = {
+            "mambas": jax.vmap(lambda k: _init_mamba_block(k, cfg))(
+                jnp.stack(ks[:per])),
+            # per-use LoRA adapter modulating the shared attention input
+            "lora_a": _he(ks[per], (cfg.d_model, _LORA_RANK), cfg.d_model),
+            "lora_b": jnp.zeros((_LORA_RANK, cfg.d_model), jnp.float32),
+        }
+        return p
+    if kind == "xlstm_super":
+        def _one_mlstm(k):
+            return {"ln": init_rms_norm(cfg.d_model), "core": init_mlstm(k, cfg)}
+
+        return {
+            "mlstms": jax.vmap(_one_mlstm)(jnp.stack(ks[: per - 1])),
+            "slstm": {"ln": init_rms_norm(cfg.d_model),
+                      "core": init_slstm(ks[per - 1], cfg)},
+        }
+    raise ValueError(kind)
+
+
+def _unscan(body, x, stacked, n):
+    """Python-loop replacement for lax.scan (cost-probe mode)."""
+    for i in range(n):
+        x, _ = body(x, jax.tree.map(lambda a: a[i], stacked))
+    return x
+
+
+def _apply_super(kind, params, x, positions, cfg, shared, per, unroll=False):
+    """Forward one super-block; returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("dense_block", "local_only"):
+        w = cfg.sliding_window if (kind == "local_only" or
+                                   (kind == "dense_block" and cfg.sliding_window and
+                                    not cfg.local_global_ratio)) else 0
+        return _dense_block(params, x, positions, cfg, window=w), aux
+    if kind == "moe_block":
+        x, aux = _moe_block(params, x, positions, cfg)
+        return x, aux
+    if kind == "local_global":
+        def body(h, p):
+            return _dense_block(p, h, positions, cfg, window=cfg.sliding_window), None
+        x = _unscan(body, x, params["locals"], per - 1) if unroll else \
+            jax.lax.scan(body, x, params["locals"])[0]
+        x = _dense_block(params["global"], x, positions, cfg, window=0)
+        return x, aux
+    if kind == "mamba_hybrid":
+        def body(h, p):
+            return _mamba_block(p, h, cfg), None
+        x = _unscan(body, x, params["mambas"], per) if unroll else \
+            jax.lax.scan(body, x, params["mambas"])[0]
+        # shared attention block with per-use LoRA input adaptation
+        adapt = (x @ params["lora_a"].astype(x.dtype)) @ params["lora_b"].astype(x.dtype)
+        x = _dense_block(shared["block"], x + adapt, positions, cfg)
+        return x, aux
+    if kind == "xlstm_super":
+        def body(h, p):
+            return h + mlstm_apply(p["core"], rms_norm(p["ln"], h, cfg.norm_eps), cfg), None
+        x = _unscan(body, x, params["mlstms"], per - 1) if unroll else \
+            jax.lax.scan(body, x, params["mlstms"])[0]
+        x = x + slstm_apply(
+            params["slstm"]["core"],
+            rms_norm(params["slstm"]["ln"], x, cfg.norm_eps), cfg)
+        return x, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# full decoder
+# ---------------------------------------------------------------------------
+
+def init_decoder(key, cfg: ModelConfig) -> Dict[str, Any]:
+    segs = segments_for(cfg)
+    keys = jax.random.split(key, len(segs) + 3)
+    params: Dict[str, Any] = {}
+    if cfg.frontend is None:
+        params["embed"] = init_embedding(keys[0], cfg.padded_vocab, cfg.d_model)
+    else:
+        # frontend stub: inputs arrive as embeddings; separate output head
+        params["embed"] = init_embedding(keys[0], cfg.padded_vocab, cfg.d_model)
+    params["segments"] = []
+    for i, (kind, n_iter, per) in enumerate(segs):
+        sub = jax.random.split(keys[i + 1], n_iter)
+        params["segments"].append(
+            jax.vmap(lambda k: _init_super(k, kind, cfg, per))(jnp.stack(sub))
+        )
+    if cfg.family == "hybrid":
+        params["shared_attn"] = {"block": _init_dense_block(keys[-2], cfg)}
+    params["final_norm"] = init_rms_norm(cfg.d_model)
+    return params
+
+
+def _needs_mlstm_ln(cfg):
+    return cfg.family == "ssm" and cfg.mlstm_slstm_pattern
+
+
+def init_mlstm_block_extra(p, cfg):  # pragma: no cover - helper for init only
+    return p
+
+
+def decoder_apply(params, cfg: ModelConfig, tokens=None, embeddings=None,
+                  positions=None, remat: bool = True, unroll: bool = False):
+    """Forward pass -> (logits (B,S,V), aux_loss).
+
+    ``unroll=True`` replaces the layer scans with Python loops — used by the
+    dry-run cost probes, where XLA's cost_analysis counts while-loop bodies
+    once (see benchmarks/roofline.py).
+    """
+    if embeddings is None:
+        x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+        B, S = tokens.shape
+    else:
+        x = embeddings.astype(jnp.dtype(cfg.dtype))
+        B, S = embeddings.shape[:2]
+    if positions is None:
+        base = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        positions = (
+            jnp.broadcast_to(base[None], (3, B, S))
+            if cfg.mrope_sections is not None else base
+        )
+    shared = params.get("shared_attn")
+    aux_total = jnp.zeros((), jnp.float32)
+    for (kind, n_iter, per), seg_params in zip(segments_for(cfg), params["segments"]):
+        def body(h, p, _kind=kind, _per=per):
+            out, aux = _apply_super(_kind, p, h, positions, cfg, shared, _per,
+                                    unroll=unroll)
+            return out, aux
+        if remat:
+            body = jax.checkpoint(body, policy=_remat_policy(cfg),
+                                  prevent_cse=False)
+        if unroll:
+            for i in range(n_iter):
+                p_i = jax.tree.map(lambda a: a[i], seg_params)
+                x, aux = body(x, p_i)
+                aux_total = aux_total + aux
+        else:
+            def scan_body(h, p):
+                out, aux = body(h, p)
+                return out, aux
+            x, auxs = jax.lax.scan(scan_body, x, seg_params)
+            aux_total = aux_total + auxs.sum()
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    return logits, aux_total
+
+
+# -- decode -------------------------------------------------------------------
+
+def _init_super_cache(kind, batch, max_len, cfg, per, dtype):
+    if kind in ("dense_block", "local_only", "moe_block"):
+        w = cfg.sliding_window if kind == "local_only" else 0
+        eff = min(max_len, w) if w else max_len
+        return init_cache(batch, eff, cfg, dtype)
+    if kind == "local_global":
+        w = min(max_len, cfg.sliding_window)
+        return {
+            "locals": _stack_caches(
+                [init_cache(batch, w, cfg, dtype) for _ in range(per - 1)]),
+            "global": init_cache(batch, max_len, cfg, dtype),
+        }
+    if kind == "mamba_hybrid":
+        return {
+            "mambas": _stack_caches(
+                [init_mamba_cache(batch, cfg) for _ in range(per)]),
+            "attn": init_cache(batch, max_len, cfg, dtype),
+        }
+    if kind == "xlstm_super":
+        return {
+            "mlstms": _stack_caches(
+                [init_mlstm_cache(batch, cfg) for _ in range(per - 1)]),
+            "slstm": init_slstm_cache(batch, cfg),
+        }
+    raise ValueError(kind)
+
+
+def _stack_caches(caches):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+
+
+def init_decoder_cache(batch: int, max_len: int, cfg: ModelConfig, dtype=jnp.bfloat16):
+    segs = segments_for(cfg)
+    return [
+        _stack_caches(
+            [_init_super_cache(kind, batch, max_len, cfg, per, dtype)
+             for _ in range(n_iter)])
+        for kind, n_iter, per in segs
+    ]
+
+
+def _decode_super(kind, params, x, cache, cfg, shared, per):
+    if kind in ("dense_block", "local_only"):
+        w = cfg.sliding_window if kind == "local_only" else 0
+        return _dense_block_decode(params, x, cache, cfg, window=w)
+    if kind == "moe_block":
+        return _moe_block_decode(params, x, cache, cfg)
+    if kind == "local_global":
+        def body(h, pc):
+            p, c = pc
+            h, c = _dense_block_decode(p, h, c, cfg, window=cfg.sliding_window)
+            return h, c
+        x, lc = jax.lax.scan(body, x, (params["locals"], cache["locals"]))
+        x, gc = _dense_block_decode(params["global"], x, cache["global"], cfg)
+        return x, {"locals": lc, "global": gc}
+    if kind == "mamba_hybrid":
+        def body(h, pc):
+            p, c = pc
+            h, c = _mamba_block_decode(p, h, c, cfg)
+            return h, c
+        x, mc = jax.lax.scan(body, x, (params["mambas"], cache["mambas"]))
+        adapt = (x @ params["lora_a"].astype(x.dtype)) @ params["lora_b"].astype(x.dtype)
+        x, ac = _dense_block_decode(shared["block"], x + adapt, cache["attn"], cfg)
+        return x, {"mambas": mc, "attn": ac}
+    if kind == "xlstm_super":
+        def body(h, pc):
+            p, c = pc
+            y, c = mlstm_decode(p["core"], rms_norm(p["ln"], h, cfg.norm_eps), c, cfg)
+            return h + y, c
+        x, mc = jax.lax.scan(body, x, (params["mlstms"], cache["mlstms"]))
+        y, sc = slstm_decode(
+            params["slstm"]["core"],
+            rms_norm(params["slstm"]["ln"], x, cfg.norm_eps),
+            cache["slstm"], cfg)
+        return x + y, {"mlstms": mc, "slstm": sc}
+    raise ValueError(kind)
+
+
+def decoder_decode(params, cfg: ModelConfig, cache, token=None, embedding=None,
+                   unroll: bool = False):
+    """One-token decode step -> (logits (B,1,V), new_cache)."""
+    if embedding is None:
+        x = embed(params["embed"], token).astype(jnp.dtype(cfg.dtype))
+    else:
+        x = embedding.astype(jnp.dtype(cfg.dtype))
+    shared = params.get("shared_attn")
+    new_segs = []
+    for (kind, n_iter, per), seg_params, seg_cache in zip(
+            segments_for(cfg), params["segments"], cache):
+        def body(h, pc, _kind=kind, _per=per):
+            p, c = pc
+            h, c = _decode_super(_kind, p, h, c, cfg, shared, _per)
+            return h, c
+        if unroll:
+            outs = []
+            for i in range(n_iter):
+                pc_i = jax.tree.map(lambda a: a[i], (seg_params, seg_cache))
+                x, c_i = body(x, pc_i)
+                outs.append(c_i)
+            new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        else:
+            x, new_cache = jax.lax.scan(body, x, (seg_params, seg_cache))
+        new_segs.append(new_cache)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    return logits, new_segs

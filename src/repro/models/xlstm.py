@@ -1,0 +1,216 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory, strictly recurrent) — Beck et al., arXiv:2405.04517.
+
+mLSTM is linear attention with data-dependent exponential gating:
+
+    C_t = f_t C_{t-1} + i_t (v_t k_t^T);   n_t = f_t n_{t-1} + i_t k_t
+    y_t = (C_t q_t) / max(|n_t . q_t|, 1)
+
+The parallel/chunked form reuses the SSD scan from ``repro.models.ssm``
+(state = C augmented with the normalizer row by appending a constant-1
+channel to v).  sLSTM has no parallel form — it is a ``lax.scan`` over
+time by construction (noted in DESIGN.md; this is the architecture, not an
+implementation shortcut).  xlstm-1.3b interleaves them 5:1.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _he, dense, init_dense, init_rms_norm, rms_norm
+from .ssm import ssd_chunked
+
+__all__ = [
+    "init_mlstm",
+    "mlstm_apply",
+    "mlstm_decode",
+    "init_mlstm_cache",
+    "init_slstm",
+    "slstm_apply",
+    "slstm_decode",
+]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+class MLstmCache(NamedTuple):
+    C: jnp.ndarray    # (B, H, P+1, K) matrix memory (+normalizer row)
+    m: jnp.ndarray    # (B, H) gate stabilizer (running max of log gates)
+
+
+def init_mlstm(key, cfg):
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = cfg.head_dim_
+    kq, kk, kv, kg, ko, kz = jax.random.split(key, 6)
+    return {
+        "wq": init_dense(kq, d, H * hd),
+        "wk": init_dense(kk, d, H * hd),
+        "wv": init_dense(kv, d, H * hd),
+        "w_gates": init_dense(kg, d, 2 * H, bias=True),  # i, f per head
+        "wz": init_dense(kz, d, H * hd),                 # output gate branch
+        "norm": init_rms_norm(H * hd),
+        "wo": init_dense(ko, H * hd, d),
+    }
+
+
+def _mlstm_qkv(params, x, cfg):
+    B, L, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim_
+    q = dense(params["wq"], x).reshape(B, L, H, hd)
+    k = dense(params["wk"], x).reshape(B, L, H, hd) / jnp.sqrt(hd).astype(x.dtype)
+    v = dense(params["wv"], x).reshape(B, L, H, hd)
+    gates = dense(params["w_gates"], x).reshape(B, L, H, 2).astype(jnp.float32)
+    log_i = -jax.nn.softplus(-gates[..., 0])       # log sigmoid(i)
+    log_f = -jax.nn.softplus(-gates[..., 1])       # log sigmoid(f)
+    return q, k, v, log_i, log_f
+
+
+def mlstm_apply(params, x, cfg):
+    """Full-sequence mLSTM via the SSD chunked scan (per-head decays)."""
+    B, L, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim_
+    q, k, v, log_i, log_f = _mlstm_qkv(params, x, cfg)
+    # augment v with ones so the normalizer n rides along as channel hd
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    # ssd expects shared B/C over heads; mLSTM k/q are per-head, so run the
+    # scan per head via vmap over the head axis.
+    def per_head(xh, ah, Bh, Ch):
+        y, _ = ssd_chunked(xh[:, :, None], ah[..., None], Bh, Ch)
+        return y[:, :, 0]
+
+    # input weighting: i_t enters multiplicatively (like dt in SSD)
+    xs = v_aug * jnp.exp(log_i)[..., None].astype(v.dtype)
+    y = jax.vmap(per_head, in_axes=(2, 2, 2, 2), out_axes=2)(
+        xs, log_f, k, q
+    )  # (B, L, H, hd+1)
+    num, den = y[..., :-1], y[..., -1:]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    z = dense(params["wz"], x)
+    y = y.reshape(B, L, H * hd) * jax.nn.silu(z)
+    y = rms_norm(params["norm"], y, cfg.norm_eps)
+    return dense(params["wo"], y)
+
+
+def init_mlstm_cache(batch: int, cfg, dtype=jnp.float32) -> MLstmCache:
+    H, hd = cfg.n_heads, cfg.head_dim_
+    return MLstmCache(
+        C=jnp.zeros((batch, H, hd + 1, hd), dtype),
+        m=jnp.full((batch, H), -1e9, dtype),
+    )
+
+
+def mlstm_decode(params, x, cache: MLstmCache, cfg) -> Tuple[jnp.ndarray, MLstmCache]:
+    B = x.shape[0]
+    H, hd = cfg.n_heads, cfg.head_dim_
+    q, k, v, log_i, log_f = _mlstm_qkv(params, x, cfg)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]
+    log_i, log_f = log_i[:, 0], log_f[:, 0]
+    # stabilized exponential gating (xLSTM eq. 15-18)
+    m_new = jnp.maximum(log_f + cache.m, log_i)
+    f_eff = jnp.exp(log_f + cache.m - m_new)
+    i_eff = jnp.exp(log_i - m_new)
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    C = cache.C * f_eff[..., None, None].astype(cache.C.dtype) + (
+        i_eff[..., None, None].astype(v.dtype) * v_aug[..., None] * k[..., None, :]
+    ).astype(cache.C.dtype)
+    y = jnp.einsum("bhpk,bhk->bhp", C.astype(q.dtype), q)
+    num, den = y[..., :-1], y[..., -1]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    z = dense(params["wz"], x)[:, 0]
+    y = y.reshape(B, H * hd) * jax.nn.silu(z)
+    y = rms_norm(params["norm"], y, cfg.norm_eps)
+    out = dense(params["wo"], y)[:, None, :]
+    return out, MLstmCache(C=C, m=m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+class SLstmCache(NamedTuple):
+    c: jnp.ndarray    # (B, d)
+    n: jnp.ndarray    # (B, d)
+    h: jnp.ndarray    # (B, d)
+    m: jnp.ndarray    # (B, d) stabilizer
+
+
+def init_slstm(key, cfg):
+    d = cfg.d_model
+    H = cfg.n_heads
+    hb = d // H
+    kx, kr, ko = jax.random.split(key, 3)
+    return {
+        # x -> (z, i, f, o) pre-activations
+        "wx": init_dense(kx, d, 4 * d, bias=True),
+        # block-diagonal recurrent weights per head: (H, hb, 4*hb)
+        "r": _he(kr, (H, hb, 4 * hb), hb),
+        "norm": init_rms_norm(d),
+        "wo": init_dense(ko, d, d),
+    }
+
+
+def _slstm_step(params, cfg, carry, xw):
+    c, n, h, m = carry
+    B = c.shape[0]
+    d = cfg.d_model
+    H = cfg.n_heads
+    hb = d // H
+    hr = h.reshape(B, H, hb)
+    rec = jnp.einsum("bhi,hio->bho", hr, params["r"].astype(h.dtype))  # (B,H,4hb)
+    # re-lay (B,H,4,hb) -> z|i|f|o blocks of (B,d) to match wx's output
+    rec = rec.reshape(B, H, 4, hb).transpose(0, 2, 1, 3).reshape(B, 4 * d)
+    zifo = xw + rec.astype(xw.dtype)
+    z, i_raw, f_raw, o_raw = jnp.split(zifo.astype(jnp.float32), 4, axis=-1)
+    log_i = -jax.nn.softplus(-i_raw)
+    log_f = -jax.nn.softplus(-f_raw)
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_eff = jnp.exp(log_i - m_new)
+    f_eff = jnp.exp(log_f + m - m_new)
+    c_new = f_eff * c + i_eff * jnp.tanh(z)
+    n_new = f_eff * n + i_eff
+    h_new = jax.nn.sigmoid(o_raw) * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new.astype(h.dtype), m_new), h_new
+
+
+def slstm_apply(params, x, cfg):
+    """Strictly recurrent sLSTM over the sequence (lax.scan)."""
+    B, L, d = x.shape
+    xw = dense(params["wx"], x).astype(jnp.float32)            # (B, L, 4d)
+    init = (
+        jnp.zeros((B, d), jnp.float32),
+        jnp.zeros((B, d), jnp.float32),
+        jnp.zeros((B, d), x.dtype),
+        jnp.full((B, d), -1e9, jnp.float32),
+    )
+    def step(carry, xt):
+        return _slstm_step(params, cfg, carry, xt)
+
+    _, hs = jax.lax.scan(step, init, xw.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)                  # (B, L, d)
+    y = rms_norm(params["norm"], y, cfg.norm_eps)
+    return dense(params["wo"], y)
+
+
+def init_slstm_cache(batch: int, cfg, dtype=jnp.float32) -> SLstmCache:
+    d = cfg.d_model
+    return SLstmCache(
+        c=jnp.zeros((batch, d), jnp.float32),
+        n=jnp.zeros((batch, d), jnp.float32),
+        h=jnp.zeros((batch, d), dtype),
+        m=jnp.full((batch, d), -1e9, jnp.float32),
+    )
+
+
+def slstm_decode(params, x, cache: SLstmCache, cfg) -> Tuple[jnp.ndarray, SLstmCache]:
+    xw = dense(params["wx"], x)[:, 0].astype(jnp.float32)
+    carry = (cache.c, cache.n, cache.h, cache.m)
+    (c, n, h, m), h_out = _slstm_step(params, cfg, carry, xw)
+    y = rms_norm(params["norm"], h_out.astype(x.dtype), cfg.norm_eps)
+    out = dense(params["wo"], y)[:, None, :]
+    return out, SLstmCache(c=c, n=n, h=h.astype(cache.h.dtype), m=m)

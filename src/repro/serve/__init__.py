@@ -1,0 +1,11 @@
+"""Serving surface: prefill/decode step builders and cache utilities.
+
+The implementations live next to their training counterparts
+(repro.train.step) and the model cache constructors; this package is the
+stable import point a serving deployment uses.
+"""
+
+from ..models.attention import KVCache, init_cache
+from ..train.step import make_prefill_step, make_serve_step
+
+__all__ = ["KVCache", "init_cache", "make_prefill_step", "make_serve_step"]

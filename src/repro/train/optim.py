@@ -1,0 +1,79 @@
+"""AdamW with decoupled weight decay + cosine LR schedule (self-contained —
+no optax in this environment).  Optimizer state shardings mirror params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "init_opt", "apply_updates", "lr_at"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    grad_clip: float = 1.0
+
+
+class OptState(NamedTuple):
+    mu: Any
+    nu: Any
+    step: jnp.ndarray
+
+
+def init_opt(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(mu=zeros, nu=jax.tree.map(jnp.copy, zeros),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def lr_at(step, cfg: AdamWConfig):
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    t = jnp.clip((step - cfg.warmup_steps) /
+                 max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    scale = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * scale
+
+
+def apply_updates(params, grads, state: OptState, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(grads)))
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step
+    lr = lr_at(step, cfg)
+    b1c = 1 - cfg.b1 ** (step.astype(jnp.float32) + 1)
+    b2c = 1 - cfg.b2 ** (step.astype(jnp.float32) + 1)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, OptState(mu=new_m, nu=new_v, step=step + 1), metrics

@@ -1,0 +1,81 @@
+"""Train / prefill / decode step builders — the functions the dry-run lowers.
+
+``make_train_step``: CE loss (pad-masked, MoE-aux added), grads, AdamW.
+``make_prefill_step``: forward only, returns logits (inference prefill).
+``make_serve_step``: one-token decode against a KV cache.
+Gradient compression (int8 error-feedback, cross-pod) is applied when
+``compress_grads`` — see repro.distributed.compression.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import build
+from .optim import AdamWConfig, OptState, apply_updates
+
+__all__ = ["make_train_step", "make_prefill_step", "make_serve_step", "loss_fn"]
+
+_AUX_WEIGHT = 0.01
+
+
+def loss_fn(model, params, batch: Dict[str, Any], cfg: ModelConfig,
+            unroll: bool = False):
+    labels = batch["labels"]
+    inputs = {k: v for k, v in batch.items() if k != "labels"}
+    logits, aux = model.apply(params, **inputs, remat=True, unroll=unroll)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0) & (labels < cfg.vocab_size)
+    nll = jnp.where(mask, nll, 0.0)
+    ce = nll.sum() / jnp.maximum(1, mask.sum())
+    return ce + _AUX_WEIGHT * aux, ce
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig | None = None,
+                    compress_grads: bool = False, unroll: bool = False):
+    model = build(cfg)
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(params, opt_state: OptState, batch):
+        (loss, ce), grads = jax.value_and_grad(
+            lambda p: loss_fn(model, p, batch, cfg, unroll=unroll),
+            has_aux=True)(params)
+        if compress_grads:
+            from ..distributed.compression import compress_tree_int8
+
+            grads = compress_tree_int8(grads)
+        params, opt_state, metrics = apply_updates(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, "ce": ce, **metrics}
+        return params, opt_state, metrics
+
+    return model, train_step
+
+
+def make_prefill_step(cfg: ModelConfig, unroll: bool = False):
+    model = build(cfg)
+
+    def prefill_step(params, batch):
+        inputs = {k: v for k, v in batch.items() if k != "labels"}
+        logits, _ = model.apply(params, **inputs, remat=False, unroll=unroll)
+        # return only the last position's logits (what serving needs)
+        return logits[:, -1, :]
+
+    return model, prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, unroll: bool = False):
+    model = build(cfg)
+
+    def serve_step(params, cache, inputs):
+        logits, cache = model.decode_step(params, cache, **inputs,
+                                          unroll=unroll)
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1)
+        return next_token, cache
+
+    return model, serve_step

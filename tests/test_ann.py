@@ -1,0 +1,130 @@
+"""ANN substrate tests: kmeans, PQ, IVF (with every id codec), graph index."""
+
+import numpy as np
+import pytest
+
+from repro.ann.graph import GraphIndex, build_hnsw, build_nsg, knn_graph
+from repro.ann.ivf import IVFIndex
+from repro.ann.kmeans import assign, kmeans
+from repro.ann.pq import ProductQuantizer
+from repro.data.synthetic import make_dataset
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    base, queries = make_dataset("deep-like", 5000, 50, seed=0)
+    return base, queries
+
+
+def _exact_topk(base, queries, k):
+    d = (
+        np.sum(queries**2, 1, keepdims=True)
+        - 2 * queries @ base.T
+        + np.sum(base**2, 1)[None]
+    )
+    return np.argsort(d, axis=1)[:, :k]
+
+
+def test_kmeans_reduces_quantization_error(small_data):
+    base, _ = small_data
+    c1 = base[:64].copy()
+    c10 = kmeans(base, 64, iters=10)
+    def qerr(c):
+        a = assign(base, c)
+        return float(np.mean(np.sum((base - c[a]) ** 2, axis=1)))
+    assert qerr(c10) < qerr(c1) * 0.9
+
+
+def test_pq_roundtrip_reduces_error(small_data):
+    base, _ = small_data
+    pq = ProductQuantizer(m=8, bits=8).train(base, iters=3)
+    codes = pq.encode(base)
+    rec = pq.decode(codes)
+    err = np.mean(np.sum((base - rec) ** 2, 1))
+    ref = np.mean(np.sum((base - base.mean(0)) ** 2, 1))
+    assert err < 0.5 * ref
+
+
+def test_pq_adc_consistent(small_data):
+    base, queries = small_data
+    pq = ProductQuantizer(m=8, bits=8).train(base, iters=3)
+    codes = pq.encode(base)
+    t = pq.adc_tables(queries[:1])[0]
+    d_adc = pq.adc_score(codes, t)
+    d_true = np.sum((pq.decode(codes) - queries[0]) ** 2, axis=1)
+    np.testing.assert_allclose(d_adc, d_true, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("codec", ["compact", "ef", "roc", "gap_ans", "wt", "wt1"])
+def test_ivf_search_identical_across_codecs(small_data, codec):
+    """The paper's central claim: compression is LOSSLESS — search results
+    are bit-identical whatever the id codec."""
+    base, queries = small_data
+    ref_idx = IVFIndex(nlist=32, id_codec="unc64").build(base, seed=1)
+    ids_ref, d_ref, _ = ref_idx.search(queries[:10], nprobe=8, topk=5)
+    idx = IVFIndex(nlist=32, id_codec=codec).build(base, seed=1)
+    ids, d, _ = idx.search(queries[:10], nprobe=8, topk=5)
+    np.testing.assert_array_equal(ids, ids_ref)
+    np.testing.assert_allclose(d, d_ref, rtol=1e-5)
+
+
+def test_ivf_recall_reasonable(small_data):
+    base, queries = small_data
+    idx = IVFIndex(nlist=32, id_codec="roc").build(base, seed=1)
+    ids, _, _ = idx.search(queries, nprobe=8, topk=10)
+    gt = _exact_topk(base, queries, 1)
+    recall = np.mean([gt[i, 0] in ids[i] for i in range(len(queries))])
+    assert recall > 0.8
+
+
+def test_ivf_pq_with_polya_codes(small_data):
+    base, queries = small_data
+    pq = ProductQuantizer(m=8, bits=8)
+    idx = IVFIndex(nlist=16, id_codec="roc", pq=pq, code_codec="polya").build(base, seed=1)
+    bpe = idx.code_bits_per_element()
+    assert 0 < bpe <= 8.5
+    ids, _, _ = idx.search(queries[:5], nprobe=8, topk=5)
+    assert ids.shape == (5, 5)
+
+
+def test_ivf_compression_beats_compact(small_data):
+    base, _ = small_data
+    idx = IVFIndex(nlist=16, id_codec="roc").build(base, seed=1)
+    compact = np.ceil(np.log2(len(base)))
+    assert idx.bits_per_id() < compact - 3  # large clusters -> big savings
+
+
+def test_knn_graph_exact():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((300, 8)).astype(np.float32)
+    nn = knn_graph(x, 5)
+    d = np.sum((x[:, None] - x[None]) ** 2, -1)
+    np.fill_diagonal(d, np.inf)
+    ref = np.argsort(d, axis=1)[:, :5]
+    # sets must match (ties may permute)
+    match = np.mean([set(nn[i]) == set(ref[i]) for i in range(300)])
+    assert match > 0.95
+
+
+@pytest.mark.parametrize("builder", [build_nsg, build_hnsw])
+def test_graph_search_recall(small_data, builder):
+    base, queries = small_data
+    base, queries = base[:2000], queries[:30]
+    adj = builder(base, 16)
+    gi = GraphIndex(id_codec="roc").build(base, adj)
+    ids, _, _, _ = gi.search(queries, ef=32, topk=5)
+    gt = _exact_topk(base, queries, 1)
+    recall = np.mean([gt[i, 0] in ids[i] for i in range(len(queries))])
+    assert recall > 0.7
+
+
+def test_graph_codecs_identical_results(small_data):
+    base, queries = small_data
+    base, queries = base[:1000], queries[:10]
+    adj = build_nsg(base, 12)
+    ref = GraphIndex(id_codec="unc32").build(base, adj)
+    ids_ref, _, _, _ = ref.search(queries, ef=16, topk=5)
+    for codec in ["roc", "ef", "gap_ans"]:
+        gi = GraphIndex(id_codec=codec).build(base, adj)
+        ids, _, _, _ = gi.search(queries, ef=16, topk=5)
+        np.testing.assert_array_equal(ids, ids_ref)

@@ -1,0 +1,145 @@
+"""Per-architecture smoke tests: reduced config, one forward + train step +
+decode step on CPU; asserts output shapes and no NaNs (assignment contract)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.models import build, count_params
+from repro.models.encdec import dec_len_for
+
+jax.config.update("jax_platforms", "cpu")
+
+B, S = 2, 64
+
+
+def _batch_for(cfg, key):
+    ks = jax.random.split(key, 3)
+    if cfg.encoder_decoder:
+        Sd = dec_len_for(S)
+        return {
+            "frames": jax.random.normal(ks[0], (B, S, cfg.d_model)),
+            "dec_tokens": jax.random.randint(ks[1], (B, Sd), 0, cfg.vocab_size),
+        }, (B, Sd)
+    if cfg.frontend == "vision":
+        return {
+            "embeddings": jax.random.normal(ks[0], (B, S, cfg.d_model)),
+            "positions": jnp.broadcast_to(jnp.arange(S)[None, None], (3, B, S)),
+        }, (B, S)
+    return {"tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size)}, (B, S)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = reduced(get_config(arch))
+    model = build(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch, (b, s) = _batch_for(cfg, jax.random.PRNGKey(1))
+    logits, aux = model.apply(params, **batch, remat=False)
+    assert logits.shape == (b, s, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_no_nan(arch):
+    cfg = reduced(get_config(arch))
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch, (b, s) = _batch_for(cfg, jax.random.PRNGKey(1))
+    labels = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, cfg.vocab_size)
+
+    def loss_fn(p):
+        logits, aux = model.apply(p, **batch, remat=True)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1).mean()
+        return nll + 0.01 * aux
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss)), f"{arch}: loss {loss}"
+    gnorm = jax.tree_util.tree_reduce(
+        lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))), grads, 0.0
+    )
+    assert bool(jnp.isfinite(gnorm)), f"{arch}: non-finite grads"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = reduced(get_config(arch))
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.init_cache(B, 32, dtype=jnp.float32)
+    if cfg.frontend == "vision":
+        inputs = {"embedding": jax.random.normal(jax.random.PRNGKey(3), (B, 1, cfg.d_model))}
+    else:
+        inputs = {"token": jnp.zeros((B, 1), jnp.int32)}
+    logits, cache2 = model.decode_step(params, cache, **inputs)
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite decode logits"
+    logits3, _ = model.decode_step(params, cache2, **inputs)
+    assert bool(jnp.isfinite(logits3).all())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_param_count_sane(arch):
+    """eval_shape over the FULL config (no allocation) — catches shape bugs."""
+    cfg = get_config(arch)
+    n = count_params(cfg)
+    # coarse sanity bands from the arch names (e.g. 20b -> [10e9, 40e9])
+    bands = {
+        "granite-20b": (15e9, 28e9),
+        "minitron-4b": (3e9, 6.5e9),
+        "qwen2-72b": (60e9, 85e9),
+        "gemma3-1b": (0.7e9, 1.8e9),
+        "zamba2-2.7b": (2.0e9, 4.5e9),
+        "whisper-medium": (0.25e9, 1.0e9),
+        "llama4-scout-17b-a16e": (80e9, 130e9),
+        "olmoe-1b-7b": (5e9, 9e9),
+        "xlstm-1.3b": (1.0e9, 2.5e9),
+        "qwen2-vl-7b": (6e9, 9e9),
+    }
+    lo, hi = bands[arch]
+    assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params out of band"
+
+
+def test_blocked_attention_matches_dense():
+    """Flash-style blocked path == dense reference (hillclimb #1 oracle)."""
+    import numpy as np
+    from repro.models import attention as A
+
+    rng = np.random.default_rng(0)
+    cfg = reduced(get_config("minitron-4b"))
+    B_, S_, H, KV, D = 2, 512, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((B_, S_, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B_, S_, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B_, S_, KV, D)), jnp.float32)
+    A_BQ, A_BKV = A._BLOCK_Q, A._BLOCK_KV
+    A._BLOCK_Q, A._BLOCK_KV = 128, 128
+    for causal, window in [(True, 0), (True, 64), (False, 0)]:
+        mask = A._causal_mask(S_, S_, window) if causal else None
+        ref = A._sdpa(q, k, v, mask, cfg)
+        blk = A._sdpa_blocked(q, k, v, cfg, causal=causal, window=window)
+        np.testing.assert_allclose(np.asarray(blk), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+    A._BLOCK_Q, A._BLOCK_KV = A_BQ, A_BKV
+
+
+def test_blocked_attention_uneven_chunks():
+    import numpy as np
+    from repro.models import attention as A
+
+    rng = np.random.default_rng(1)
+    cfg = reduced(get_config("granite-20b"))
+    q = jnp.asarray(rng.standard_normal((1, 300, 4, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 300, 1, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 300, 1, 16)), jnp.float32)
+    A_BQ, A_BKV = A._BLOCK_Q, A._BLOCK_KV
+    A._BLOCK_Q, A._BLOCK_KV = 128, 128
+    ref = A._sdpa(q, k, v, A._causal_mask(300, 300, 0), cfg)
+    blk = A._sdpa_blocked(q, k, v, cfg, causal=True)
+    A._BLOCK_Q, A._BLOCK_KV = A_BQ, A_BKV
+    np.testing.assert_allclose(np.asarray(blk), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,92 @@
+"""Fault tolerance: atomic checkpointing, crash-resume, pipeline determinism,
+and the end-to-end training driver (loss must go down)."""
+
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import (latest_step, restore_checkpoint,
+                                         save_checkpoint)
+from repro.data.pipeline import TokenPipeline
+from repro.launch.train import main as train_main
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (8, 8)),
+            "nested": {"b": jnp.arange(5, dtype=jnp.float32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    s = _state()
+    save_checkpoint(tmp_path, 7, s, extra={"pipeline": {"seed": 0, "step": 7}})
+    assert latest_step(tmp_path) == 7
+    restored, manifest = restore_checkpoint(tmp_path, jax.eval_shape(lambda: s))
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(s["w"]))
+    assert manifest["extra"]["pipeline"]["step"] == 7
+
+
+def test_checkpoint_survives_partial_write(tmp_path):
+    """A half-written step dir must not break resume (crash simulation)."""
+    s = _state()
+    save_checkpoint(tmp_path, 10, s)
+    # simulate a crash mid-write of step 20: tmp dir + stale LATEST pointer
+    broken = tmp_path / "step_00000020"
+    broken.mkdir()
+    (broken / "arrays.npz").write_bytes(b"garbage")
+    (tmp_path / "LATEST").write_text("20")
+    assert latest_step(tmp_path) == 10  # falls back to newest valid
+    restored, m = restore_checkpoint(tmp_path, jax.eval_shape(lambda: s))
+    assert m["step"] == 10
+
+
+def test_pipeline_deterministic_and_resumable():
+    p1 = TokenPipeline(vocab=100, batch=4, seq_len=16, seed=3)
+    b5 = p1.batch_at(5)
+    p2 = TokenPipeline(vocab=100, batch=4, seq_len=16, seed=3).restore(
+        {"seed": 3, "step": 5})
+    it = iter(p2)
+    np.testing.assert_array_equal(next(it)["tokens"], b5["tokens"])
+    # shards draw disjoint slices deterministically
+    a = TokenPipeline(vocab=100, batch=8, seq_len=16, seed=3, n_shards=2, shard=0)
+    b = TokenPipeline(vocab=100, batch=8, seq_len=16, seed=3, n_shards=2, shard=1)
+    assert not np.array_equal(a.batch_at(0)["tokens"], b.batch_at(0)["tokens"])
+
+
+def test_train_loss_decreases():
+    losses = train_main(["--arch", "gemma3-1b", "--reduced", "--steps", "40",
+                         "--batch", "4", "--seq", "64", "--lr", "1e-3"])
+    assert losses[-1] < losses[0] - 0.3
+
+
+def test_train_crash_and_resume(tmp_path):
+    """Run 30 steps with ckpt-every 10; 'crash'; resume reproduces the
+    uninterrupted run exactly (same final loss)."""
+    args = ["--arch", "gemma3-1b", "--reduced", "--batch", "4", "--seq", "32",
+            "--ckpt-every", "10", "--ckpt-dir", str(tmp_path)]
+    full = train_main(args + ["--steps", "30", "--resume", "never"])
+    # crash after 20 steps (fresh dir, same 30-step schedule)
+    shutil.rmtree(tmp_path)
+    train_main(args + ["--steps", "30", "--resume", "never",
+                       "--stop-after", "20"])
+    assert latest_step(tmp_path) == 20
+    resumed = train_main(args + ["--steps", "30"])  # auto-resume from 20
+    assert len(resumed) == 10
+    np.testing.assert_allclose(resumed[-1], full[-1], rtol=1e-4)
+
+
+def test_moe_arch_trains():
+    losses = train_main(["--arch", "olmoe-1b-7b", "--reduced", "--steps", "25",
+                         "--batch", "4", "--seq", "32", "--lr", "1e-3"])
+    assert losses[-1] < losses[0]
+
+
+def test_hybrid_arch_trains():
+    losses = train_main(["--arch", "zamba2-2.7b", "--reduced", "--steps", "25",
+                         "--batch", "4", "--seq", "64", "--lr", "1e-3"])
+    assert losses[-1] < losses[0]

@@ -1,0 +1,197 @@
+"""Unit + property tests for the ANS coders (BigANS, StreamANS, VRans)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ans import BigANS, StreamANS
+from repro.core.vrans import VRansDecoder, VRansEncoder
+
+
+# ---------------------------------------------------------------------------
+# BigANS
+# ---------------------------------------------------------------------------
+
+def test_bigans_uniform_roundtrip():
+    rng = np.random.default_rng(0)
+    ns = rng.integers(2, 1000, size=200)
+    xs = [int(rng.integers(0, n)) for n in ns]
+    ans = BigANS()
+    for x, n in zip(xs, ns):
+        ans.push_uniform(x, int(n))
+    for x, n in zip(reversed(xs), reversed(ns)):
+        assert ans.pop_uniform(int(n)) == x
+    assert ans.state == 0
+
+
+def test_bigans_rate_is_exact():
+    # k uniform symbols over [256) cost exactly 8k bits (up to the leading
+    # symbol's own magnitude)
+    ans = BigANS()
+    for _ in range(100):
+        ans.push_uniform(255, 256)
+    assert ans.bits == 800
+    ans2 = BigANS()
+    for _ in range(100):
+        ans2.push_uniform(7, 256)
+    assert 792 < ans2.bits <= 800
+
+
+def test_bigans_pmf_roundtrip():
+    rng = np.random.default_rng(1)
+    freqs = np.array([3, 1, 5, 7], dtype=np.int64)
+    total = int(freqs.sum())
+    cums = np.concatenate([[0], np.cumsum(freqs)[:-1]])
+    xs = rng.integers(0, 4, size=500)
+    ans = BigANS()
+    for x in xs:
+        ans.push_pmf(int(cums[x]), int(freqs[x]), total)
+    for x in reversed(xs):
+        cf = ans.pop_cf(total)
+        sym = int(np.searchsorted(np.cumsum(freqs), cf, side="right"))
+        assert sym == x
+        ans.pop_advance(int(cums[sym]), int(freqs[sym]), total)
+    assert ans.state == 0
+
+
+def test_bigans_serialization():
+    ans = BigANS()
+    for x in [5, 77, 1000]:
+        ans.push_uniform(x, 2048)
+    raw = ans.tobytes()
+    ans2 = BigANS.frombytes(raw)
+    assert [ans2.pop_uniform(2048) for _ in range(3)] == [1000, 77, 5]
+
+
+@given(st.lists(st.integers(0, 2**20 - 1), min_size=1, max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_bigans_uniform_property(xs):
+    ans = BigANS()
+    for x in xs:
+        ans.push_uniform(x, 2**20)
+    out = [ans.pop_uniform(2**20) for _ in range(len(xs))]
+    assert out == list(reversed(xs))
+    assert ans.state == 0
+
+
+# ---------------------------------------------------------------------------
+# StreamANS (pow2 totals)
+# ---------------------------------------------------------------------------
+
+def test_streamans_roundtrip_mixed_precisions():
+    rng = np.random.default_rng(2)
+    ops = []
+    for _ in range(2000):
+        r = int(rng.integers(1, 17))
+        total = 1 << r
+        f = int(rng.integers(1, total + 1))
+        c = int(rng.integers(0, total - f + 1))
+        ops.append((c, f, r))
+    ans = StreamANS()
+    for c, f, r in ops:
+        ans.push(c, f, r)
+    for c, f, r in reversed(ops):
+        if f == (1 << r):
+            continue
+        cf = ans.pop_cf(r)
+        assert c <= cf < c + f
+        ans.pop_advance(c, f, r)
+    assert ans.head == 1 << 32 and not ans.tail
+
+
+def test_streamans_rate_close_to_entropy():
+    # skewed binary source, p=1/16 -> H ~= 0.337 bits/sym
+    rng = np.random.default_rng(3)
+    xs = (rng.random(20000) < 1 / 16).astype(int)
+    f0, f1 = 15 << 12, 1 << 12  # /2^16
+    ans = StreamANS()
+    for x in xs:
+        ans.push(0 if x == 0 else f0, f1 if x else f0, 16)
+    h = 0.3373
+    bits = ans.bits - 64  # subtract the seed head
+    assert bits / len(xs) == pytest.approx(h, rel=0.05)
+
+
+def test_streamans_underflow_raises():
+    ans = StreamANS()
+    ans.push(0, 1, 8)
+    ans.pop_advance(0, 1, 8)
+    with pytest.raises(ValueError):
+        for _ in range(20):
+            ans.pop_advance(0, 1, 8)
+
+
+# ---------------------------------------------------------------------------
+# VRans (vectorized lanes)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lanes", [1, 3, 64])
+def test_vrans_uniform_roundtrip(lanes):
+    rng = np.random.default_rng(4)
+    rows = 100
+    r = 13
+    data = rng.integers(0, 1 << r, size=(rows, lanes))
+    enc = VRansEncoder(lanes)
+    for t in range(rows - 1, -1, -1):
+        enc.push_uniform(data[t], r)
+    heads, words = enc.finalize()
+    dec = VRansDecoder(heads, words)
+    for t in range(rows):
+        out = dec.pop_uniform(r)
+        np.testing.assert_array_equal(out, data[t])
+    np.testing.assert_array_equal(dec.heads, np.full(lanes, 1 << 32, np.uint64))
+
+
+def test_vrans_masked_ragged_roundtrip():
+    rng = np.random.default_rng(5)
+    lanes, rows, r = 8, 50, 10
+    data = rng.integers(0, 1 << r, size=(rows, lanes))
+    lens = rng.integers(0, rows + 1, size=lanes)  # per-lane lengths
+    mask = np.arange(rows)[:, None] < lens[None, :]
+    enc = VRansEncoder(lanes)
+    for t in range(rows - 1, -1, -1):
+        enc.push_uniform(data[t], r, mask=mask[t])
+    heads, words = enc.finalize()
+    dec = VRansDecoder(heads, words)
+    for t in range(rows):
+        out = dec.pop_uniform(r, mask=mask[t])
+        np.testing.assert_array_equal(out[mask[t]], data[t][mask[t]])
+
+
+def test_vrans_pmf_roundtrip():
+    rng = np.random.default_rng(6)
+    lanes, rows, r = 16, 200, 12
+    total = 1 << r
+    freqs_tab = np.array([total // 2, total // 4, total // 8, total // 8])
+    cums_tab = np.concatenate([[0], np.cumsum(freqs_tab)[:-1]])
+    slot2sym = np.repeat(np.arange(4), freqs_tab)
+    data = rng.integers(0, 4, size=(rows, lanes))
+    enc = VRansEncoder(lanes)
+    for t in range(rows - 1, -1, -1):
+        enc.push(cums_tab[data[t]], freqs_tab[data[t]], r)
+    heads, words = enc.finalize()
+    dec = VRansDecoder(heads, words)
+    for t in range(rows):
+        cf = dec.peek_cf(r)
+        sym = slot2sym[cf]
+        np.testing.assert_array_equal(sym, data[t])
+        dec.advance(cums_tab[sym], freqs_tab[sym], r)
+
+
+@given(
+    st.integers(1, 16),
+    st.integers(1, 12),
+    st.integers(0, 2**32 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_vrans_property_roundtrip(lanes, r, seed):
+    rng = np.random.default_rng(seed)
+    rows = int(rng.integers(1, 40))
+    data = rng.integers(0, 1 << r, size=(rows, lanes))
+    enc = VRansEncoder(lanes)
+    for t in range(rows - 1, -1, -1):
+        enc.push_uniform(data[t], r)
+    heads, words = enc.finalize()
+    dec = VRansDecoder(heads, words)
+    for t in range(rows):
+        np.testing.assert_array_equal(dec.pop_uniform(r), data[t])

@@ -1,0 +1,199 @@
+"""Distribution-layer tests: sharding rules, gradient compression, pipeline
+parallelism, and a real (tiny) multi-device train step."""
+
+import os
+
+import pytest
+
+# 8 virtual devices for this module (set before jax initializes)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import get_config, reduced  # noqa: E402
+from repro.distributed.compression import EFCompressor, compress_tree_int8  # noqa: E402
+from repro.distributed.pp import pipeline_apply  # noqa: E402
+from repro.distributed.sharding import (  # noqa: E402
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+)
+from repro.models import build  # noqa: E402
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 8, reason="needs 8 virtual devices")
+
+
+def _mesh():
+    return jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_param_shardings_cover_tree():
+    cfg = reduced(get_config("olmoe-1b-7b"))
+    model = build(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    mesh = _mesh()
+    sh = param_shardings(shapes, mesh, cfg.n_experts)
+    n_sharded = 0
+    for leaf, s in zip(jax.tree.leaves(shapes), jax.tree.leaves(sh)):
+        assert s.mesh.shape == mesh.shape
+        for dim, name in zip(leaf.shape, s.spec + (None,) * 10):
+            if name:
+                size = int(np.prod([mesh.shape[a] for a in
+                                    ((name,) if isinstance(name, str) else name)]))
+                assert dim % size == 0, (leaf.shape, s.spec)
+                n_sharded += 1
+    assert n_sharded > 10  # rules actually fire
+
+
+def test_sharded_train_step_runs():
+    """End-to-end jit on a real 2x4 mesh with the repo sharding rules."""
+    from repro.train.optim import init_opt
+    from repro.train.step import make_train_step
+
+    cfg = reduced(get_config("minitron-4b"))
+    mesh = _mesh()
+    model, train_step = make_train_step(cfg)
+    with jax.set_mesh(mesh):
+        params = model.init(jax.random.PRNGKey(0))
+        shapes = jax.eval_shape(lambda: params)
+        p_sh = param_shardings(shapes, mesh, cfg.n_experts)
+        params = jax.tree.map(jax.device_put, params, p_sh)
+        opt = init_opt(params)
+        batch = {
+            "tokens": jnp.zeros((8, 32), jnp.int32),
+            "labels": jnp.zeros((8, 32), jnp.int32),
+        }
+        b_sh = batch_shardings(jax.eval_shape(lambda: batch), mesh)
+        batch = jax.tree.map(jax.device_put, batch, b_sh)
+        params, opt, metrics = jax.jit(train_step)(params, opt, batch)
+        assert bool(jnp.isfinite(metrics["loss"]))
+
+
+def test_cache_shardings_decode():
+    cfg = get_config("granite-20b")  # kv=1: seq must take the model axis
+    model = build(cfg)
+    mesh = _mesh()
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(128, 1024))
+    sh = cache_shardings(cache_shapes, mesh, 128, cfg.n_kv_heads)
+    kv_leaves = [
+        (l, s) for l, s in zip(jax.tree.leaves(cache_shapes), jax.tree.leaves(sh))
+        if l.ndim >= 4 and l.shape[-2] == cfg.n_kv_heads
+    ]
+    assert kv_leaves
+    for leaf, s in kv_leaves:
+        assert "model" in str(s.spec)  # seq-dim model sharding kicked in
+
+
+def test_int8_compression_error_bounded():
+    rng = np.random.default_rng(0)
+    g = {"a": jnp.asarray(rng.standard_normal((128, 64)) * 0.01)}
+    q = compress_tree_int8(g)
+    err = jnp.abs(q["a"] - g["a"]).max()
+    assert float(err) <= 0.01 * 2 / 127 + 1e-6
+
+
+def test_error_feedback_accumulates():
+    """EF residual makes the *sum* of compressed grads track the true sum."""
+    rng = np.random.default_rng(1)
+    params = {"w": jnp.zeros((32,))}
+    comp = EFCompressor(params)
+    total_true = np.zeros(32)
+    total_comp = np.zeros(32)
+    for _ in range(50):
+        g = {"w": jnp.asarray(rng.standard_normal(32) * 1e-3)}
+        total_true += np.asarray(g["w"])
+        total_comp += np.asarray(comp(g)["w"])
+    # without EF, bias ~ 50 * quantization step; with EF it stays ~ 1 step
+    step = 1e-3 * 3 / 127
+    assert np.abs(total_comp - total_true).max() < 5 * step
+
+
+def test_grad_compression_training_parity():
+    """Compressed training must reach a loss close to uncompressed."""
+    from repro.launch.train import main as train_main
+
+    base = train_main(["--arch", "gemma3-1b", "--reduced", "--steps", "30",
+                       "--batch", "4", "--seq", "32"])
+    comp = train_main(["--arch", "gemma3-1b", "--reduced", "--steps", "30",
+                       "--batch", "4", "--seq", "32", "--compress-grads"])
+    assert comp[-1] < base[0]               # it actually trains
+    assert abs(comp[-1] - base[-1]) < 0.25  # and tracks the fp path
+
+
+def test_pipeline_matches_sequential():
+    mesh = jax.make_mesh((4,), ("pod",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(2)
+    n_stages, n_micro, mb, d = 4, 8, 4, 16
+    ws = jnp.asarray(rng.standard_normal((n_stages, d, d)) * 0.3)
+
+    def stage_fn(w, x):
+        return jnp.tanh(x @ w)
+
+    x = jnp.asarray(rng.standard_normal((n_micro, mb, d)))
+    piped = pipeline_apply(stage_fn, n_stages, n_micro, mesh, axis="pod")
+    with jax.set_mesh(mesh):
+        out = piped(ws, x)
+    ref = x
+    for s in range(n_stages):
+        ref = stage_fn(ws[s], ref)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_sp_decode_matches_dense():
+    """Flash-decoding shard_map == dense attention over the gathered cache."""
+    from repro.distributed.sp import make_sp_decode
+
+    mesh = jax.make_mesh((4,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(3)
+    B, T, H, KV, D = 2, 64, 8, 4, 16
+    q = jnp.asarray(rng.standard_normal((B, 1, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, T, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, T, KV, D)), jnp.float32)
+    valid = jnp.asarray(np.arange(T)[None, :] < 50).repeat(B, 0)
+
+    # dense reference
+    G = H // KV
+    s = jnp.einsum("bokgd->bkgd", q.reshape(B, 1, KV, G, D))
+    scores = jnp.einsum("bkgd,btkd->bkgt", s, k) / jnp.sqrt(D)
+    scores = jnp.where(valid[:, None, None, :], scores,
+                       jnp.finfo(jnp.float32).min)
+    p = jax.nn.softmax(scores, axis=-1)
+    ref = jnp.einsum("bkgt,btkd->bkgd", p, v).reshape(B, 1, H, D)
+
+    with jax.set_mesh(mesh):
+        out = make_sp_decode(mesh)(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_elastic_reshard_across_meshes():
+    """Checkpoint written under one mesh restores onto a different one."""
+    from repro.checkpoint.checkpoint import (restore_checkpoint,
+                                             save_checkpoint, reshard)
+    from repro.distributed.sharding import param_shardings
+    import tempfile
+
+    cfg = reduced(get_config("gemma3-1b"))
+    model = build(cfg)
+    mesh_a = jax.make_mesh((2, 4), ("data", "model"),
+                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_b = jax.make_mesh((4, 2), ("data", "model"),
+                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    params = model.init(jax.random.PRNGKey(0))
+    shapes = jax.eval_shape(lambda: params)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, params)
+        restored, _ = restore_checkpoint(d, shapes)
+    sh_b = param_shardings(shapes, mesh_b, cfg.n_experts)
+    placed = reshard(restored, sh_b)
+    ref = jax.tree.leaves(params)[3]
+    new = jax.tree.leaves(placed)[3]
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(new))

@@ -1,0 +1,144 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose vs ref.py
+oracles, plus end-to-end roundtrips against the numpy encoders."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.vrans import VRans16Encoder, VRans16Decoder
+from repro.kernels.pq_adc import pq_adc, pq_adc_ref
+from repro.kernels.l2_topk import l2_top1, l2_top1_ref
+from repro.kernels.rans_decode import make_tables, rans_decode, rans_decode_ref
+from repro.kernels.wt_rank import pack_bits_u32, wt_rank, wt_rank_ref
+
+jax.config.update("jax_platforms", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# pq_adc
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [100, 1024, 5000])
+@pytest.mark.parametrize("m", [4, 8, 16])
+@pytest.mark.parametrize("dtype", [jnp.uint8, jnp.int32])
+def test_pq_adc_matches_ref(n, m, dtype):
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(0, 256, size=(n, m)), dtype=dtype)
+    lut = jnp.asarray(rng.random((m, 256), np.float32))
+    out = pq_adc(codes, lut)
+    ref = pq_adc_ref(codes.astype(jnp.int32), lut)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5)
+
+
+def test_pq_adc_against_numpy_pq():
+    from repro.ann.pq import ProductQuantizer
+
+    rng = np.random.default_rng(1)
+    x = rng.random((2000, 32), np.float32)
+    pq = ProductQuantizer(m=8, bits=8).train(x, iters=2)
+    codes = pq.encode(x)
+    q = rng.random((1, 32), np.float32)
+    table = pq.adc_tables(q)[0]
+    ker = np.asarray(pq_adc(jnp.asarray(codes), jnp.asarray(table)))
+    ref = pq.adc_score(codes, table)
+    np.testing.assert_allclose(ker, ref, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# l2_topk
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nq,k,d", [(64, 100, 32), (300, 1024, 128), (256, 77, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_l2_top1_matches_ref(nq, k, d, dtype):
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.standard_normal((nq, d)), dtype=dtype)
+    c = jnp.asarray(rng.standard_normal((k, d)), dtype=dtype)
+    idx, val = l2_top1(q, c)
+    ridx, rval = l2_top1_ref(q.astype(jnp.float32), c.astype(jnp.float32))
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_allclose(np.asarray(val), np.asarray(rval),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# rans_decode
+# ---------------------------------------------------------------------------
+
+def _geom_freqs(alpha: int, r: int) -> np.ndarray:
+    f = np.maximum(1, (1 << r) >> (np.arange(alpha) + 1)).astype(np.int64)
+    f[0] += (1 << r) - f.sum()
+    return f
+
+
+@pytest.mark.parametrize("r,alpha", [(8, 16), (12, 24), (16, 64)])
+@pytest.mark.parametrize("rows", [1, 7, 64])
+def test_rans_decode_kernel_roundtrip(r, alpha, rows):
+    """encode with the numpy 32/16 coder, decode with the Pallas kernel."""
+    rng = np.random.default_rng(3)
+    L = 128
+    freqs = _geom_freqs(alpha, r)
+    starts = np.cumsum(freqs) - freqs
+    # skewed symbols so renorm patterns vary per lane
+    p = freqs / freqs.sum()
+    data = rng.choice(alpha, size=(rows, L), p=p)
+    enc = VRans16Encoder(L)
+    for t in range(rows - 1, -1, -1):
+        enc.push(starts[data[t]], freqs[data[t]], r)
+    heads, words = enc.finalize()
+    sym_t, freq_t, start_t = make_tables(freqs, r)
+    out = rans_decode(jnp.asarray(heads), jnp.asarray(words.astype(np.uint32)),
+                      jnp.asarray(sym_t), jnp.asarray(freq_t),
+                      jnp.asarray(start_t), rows=rows, r=r)
+    np.testing.assert_array_equal(np.asarray(out), data)
+
+
+def test_rans_decode_kernel_matches_ref_oracle():
+    rng = np.random.default_rng(4)
+    L, rows, r, alpha = 128, 32, 12, 24
+    freqs = _geom_freqs(alpha, r)
+    starts = np.cumsum(freqs) - freqs
+    p = freqs / freqs.sum()
+    data = rng.choice(alpha, size=(rows, L), p=p)
+    enc = VRans16Encoder(L)
+    for t in range(rows - 1, -1, -1):
+        enc.push(starts[data[t]], freqs[data[t]], r)
+    heads, words = enc.finalize()
+    sym_t, freq_t, start_t = make_tables(freqs, r)
+    args = (jnp.asarray(heads), jnp.pad(jnp.asarray(words.astype(np.uint32)), (0, L)),
+            jnp.asarray(sym_t), jnp.asarray(freq_t), jnp.asarray(start_t))
+    ker = rans_decode(args[0], jnp.asarray(words.astype(np.uint32)),
+                      *args[2:], rows=rows, r=r)
+    ref = rans_decode_ref(*args, rows=rows, r=r)
+    np.testing.assert_array_equal(np.asarray(ker), np.asarray(ref))
+
+
+def test_vrans16_numpy_roundtrip():
+    rng = np.random.default_rng(5)
+    L, rows, r = 16, 200, 10
+    data = rng.integers(0, 1 << r, size=(rows, L))
+    enc = VRans16Encoder(L)
+    for t in range(rows - 1, -1, -1):
+        enc.push_uniform(data[t], r)
+    heads, words = enc.finalize()
+    dec = VRans16Decoder(heads, words)
+    for t in range(rows):
+        np.testing.assert_array_equal(dec.pop_uniform(r), data[t])
+
+
+# ---------------------------------------------------------------------------
+# wt_rank
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [64, 1000, 100_000])
+@pytest.mark.parametrize("p", [0.05, 0.5, 0.95])
+def test_wt_rank_matches_ref(n, p):
+    rng = np.random.default_rng(6)
+    bits = (rng.random(n) < p).astype(np.uint8)
+    words, super_cum = pack_bits_u32(bits)
+    queries = rng.integers(0, n + 1, size=777)
+    out = wt_rank(jnp.asarray(words), jnp.asarray(super_cum),
+                  jnp.asarray(queries.astype(np.int32)))
+    ref = wt_rank_ref(jnp.asarray(bits), jnp.asarray(queries.astype(np.int32)))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))

@@ -1,0 +1,164 @@
+"""System-invariant property tests (hypothesis) across the stack."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ans import StreamANS
+from repro.core.elias_fano import EliasFano
+from repro.core.polya import polya_decode_clusters, polya_encode_clusters
+from repro.core.wavelet_tree import WaveletTree
+
+jax.config.update("jax_platforms", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# coders
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**31), st.integers(1, 500))
+@settings(max_examples=30, deadline=None)
+def test_streamans_random_op_sequences(seed, n_ops):
+    """Any pow2-total op sequence round-trips and restores the seed state."""
+    rng = np.random.default_rng(seed)
+    ops = []
+    for _ in range(n_ops):
+        r = int(rng.integers(1, 17))
+        f = int(rng.integers(1, (1 << r) + 1))
+        c = int(rng.integers(0, (1 << r) - f + 1))
+        ops.append((c, f, r))
+    ans = StreamANS()
+    for c, f, r in ops:
+        ans.push(c, f, r)
+    for c, f, r in reversed(ops):
+        if f == (1 << r):
+            continue
+        cf = ans.pop_cf(r)
+        assert c <= cf < c + f
+        ans.pop_advance(c, f, r)
+    assert ans.head == 1 << 32 and not ans.tail
+
+
+@given(st.integers(0, 2**31), st.integers(1, 200), st.integers(2, 12))
+@settings(max_examples=25, deadline=None)
+def test_ef_monotone_roundtrip_and_access(seed, n, logu):
+    rng = np.random.default_rng(seed)
+    universe = max(n + 1, 1 << logu)
+    ids = np.sort(rng.choice(universe, size=min(n, universe - 1), replace=False))
+    ef = EliasFano.encode(ids, universe)
+    np.testing.assert_array_equal(ef.decode(), ids)
+    i = int(rng.integers(0, len(ids)))
+    assert ef.access(i) == ids[i]
+
+
+@given(st.integers(0, 2**31), st.integers(2, 20), st.integers(10, 400))
+@settings(max_examples=20, deadline=None)
+def test_wavelet_tree_select_inverts_access(seed, K, N):
+    rng = np.random.default_rng(seed)
+    s = rng.integers(0, K, size=N)
+    wt = WaveletTree.build(s, K)
+    k = int(rng.integers(0, K))
+    occs = np.flatnonzero(s == k)
+    for o in range(min(3, len(occs))):
+        pos = wt.select(k, o)
+        assert s[pos] == k and pos == occs[o]
+        assert wt.access(pos) == k
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=10, deadline=None)
+def test_polya_arbitrary_cluster_shapes(seed):
+    rng = np.random.default_rng(seed)
+    C = int(rng.integers(1, 6))
+    m = int(rng.integers(1, 5))
+    sizes = [int(rng.integers(1, 80)) for _ in range(C)]
+    clusters = [rng.integers(0, 256, size=(n, m)).astype(np.uint8)
+                for n in sizes]
+    heads, words, bits = polya_encode_clusters(clusters)
+    out = polya_decode_clusters(heads, words, sizes, m)
+    for a, b in zip(out, clusters):
+        np.testing.assert_array_equal(a, b)
+    assert bits > 0
+
+
+# ---------------------------------------------------------------------------
+# MoE invariants
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=10, deadline=None)
+def test_moe_capacity_and_conservation(seed):
+    """No expert processes more than C tokens; gates renormalize to <= 1."""
+    from repro.configs import get_config, reduced
+    from repro.models.moe import init_moe, moe_apply, moe_capacity
+
+    rng = np.random.default_rng(seed)
+    cfg = reduced(get_config("olmoe-1b-7b"))
+    params = init_moe(jax.random.PRNGKey(seed % 1000), cfg)
+    B, S = 2, int(rng.integers(8, 33))
+    x = jnp.asarray(rng.standard_normal((B, S, cfg.d_model)), jnp.float32)
+    y, aux = moe_apply(params, x, cfg)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+    assert float(aux) >= 0.0
+    # capacity: dispatch buffer is (E, C, d) with C bounded
+    C = moe_capacity(B * S, cfg)
+    assert C <= B * S
+
+
+# ---------------------------------------------------------------------------
+# sharding rules: any parameter tree gets valid, divisible specs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen2-72b", "llama4-scout-17b-a16e",
+                                  "zamba2-2.7b", "whisper-medium"])
+def test_param_specs_always_divisible_full_configs(arch):
+    from repro.configs import get_config
+    from repro.distributed.sharding import param_spec
+    from repro.models import build
+
+    cfg = get_config(arch)
+    tree = jax.eval_shape(build(cfg).init, jax.random.PRNGKey(0))
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        spec = param_spec(name, leaf.shape, FakeMesh(), cfg.n_experts)
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 10):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else ax
+            size = int(np.prod([FakeMesh.shape[a] for a in axes]))
+            assert dim % size == 0, (name, leaf.shape, spec)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: arbitrary pytrees
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**31), st.integers(1, 5))
+@settings(max_examples=10, deadline=None)
+def test_checkpoint_arbitrary_trees(seed, depth):
+    import tempfile
+
+    from repro.checkpoint.checkpoint import restore_checkpoint, save_checkpoint
+
+    rng = np.random.default_rng(seed)
+
+    def make(d):
+        if d == 0:
+            shape = tuple(int(x) for x in rng.integers(1, 5, rng.integers(1, 3)))
+            return jnp.asarray(rng.standard_normal(shape))
+        return {f"k{i}": make(d - 1) for i in range(int(rng.integers(1, 3)))}
+
+    tree = make(depth % 3 + 1)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, tree)
+        restored, _ = restore_checkpoint(d, jax.eval_shape(lambda: tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
