@@ -31,13 +31,17 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
-mesh = jax.make_mesh((8,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((8,), ("d",))
 xs = jax.ShapeDtypeStruct((1024, 512), jnp.float32)
 ws = jax.ShapeDtypeStruct((512, 256), jnp.float32)
 f = jax.jit(lambda x, w: x @ w,
             in_shardings=(NamedSharding(mesh, P("d", None)), NamedSharding(mesh, P())))
 c = f.lower(xs, ws).compile()
-flops = c.cost_analysis()["flops"]
+ca = c.cost_analysis()
+if isinstance(ca, list):  # old jax returns one dict per computation
+    ca = ca[0]
+flops = ca["flops"]
 global_flops = 2 * 1024 * 512 * 256
 print(flops / global_flops)
 """

@@ -5,6 +5,12 @@ PQ{4,16,32} on IVF1024 (decode impact shrinks as distance compute grows —
 the paper's Fig. 2 trend).  Median of `reps` runs over a query batch, plus
 the id-resolution time isolated (the paper's §4.1 trick makes it O(topk)).
 N=200k, 1k queries (paper: 1M / 10k — CPU-budget scale, noted).
+
+Times are produced by the **batched scan engine** (repro.ann.scan): the
+per-query Python loop would swamp the id-decode signal with interpreter
+overhead; the blocked path isolates it.  The decoded-list LRU is cleared
+between reps so every rep pays cold decodes (decodes == distinct probed
+clusters — the invariant the engine guarantees per batch).
 """
 
 from __future__ import annotations
@@ -35,19 +41,27 @@ def _coarse(base, nlist, preset):
 
 
 def run_config(base, queries, nlist, codec, pq_m=0, pq_bits=8, reps=2,
-               preset=""):
+               preset="", engine="auto"):
     pq = ProductQuantizer(m=pq_m, bits=pq_bits) if pq_m else None
     idx = IVFIndex(nlist=nlist, id_codec=codec, pq=pq).build(
         base, seed=1, centroids=_coarse(base, nlist, preset))
-    walls, res = [], []
+    # warm the jit caches off the clock, then time cold-decode reps
+    idx.search(queries[:64], nprobe=16, topk=10, engine=engine)
+    walls, res, decodes, distinct = [], [], [], []
     for _ in range(reps):
-        _, _, st = idx.search(queries, nprobe=16, topk=10)
+        idx.decoded_cache.clear()
+        _, _, st = idx.search(queries, nprobe=16, topk=10, engine=engine)
         walls.append(st.wall_s)
         res.append(st.id_resolve_s)
+        decodes.append(st.decodes)
+        distinct.append(st.distinct_probed)
     return {
         "wall_s": float(np.median(walls)),
         "id_resolve_s": float(np.median(res)),
         "bits_per_id": idx.bits_per_id(),
+        "decodes": int(np.median(decodes)),
+        "distinct_probed": int(np.median(distinct)),
+        "engine": engine,
     }
 
 

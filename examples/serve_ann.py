@@ -1,10 +1,12 @@
 """End-to-end driver: serve an ANN index with compressed ids (batched).
 
-The paper's deployment scenario: a RAM-resident IVF index answers batched
-nearest-neighbor queries; vector ids are ROC-compressed, PQ codes
+The paper's deployment scenario: a RAM-resident IVF index answers
+nearest-neighbor requests; vector ids are ROC-compressed, PQ codes
 Polya-compressed, and id resolution is deferred to the final top-k (§4.1).
-Reports recall@10 vs exact search, QPS, and the RAM ledger vs the
-uncompressed layout.
+Requests stream through :class:`repro.serve.AnnService`, which micro-batches
+them (max-batch/max-wait policy) into the blocked scan engine
+(repro.ann.scan).  Reports recall@10 vs exact search, QPS, batching and
+decode stats, and the RAM ledger vs the uncompressed layout.
 
     PYTHONPATH=src python examples/serve_ann.py [--n 200000] [--queries 2000]
 """
@@ -17,6 +19,7 @@ import numpy as np
 from repro.ann.ivf import IVFIndex
 from repro.ann.pq import ProductQuantizer
 from repro.data.synthetic import make_dataset
+from repro.serve import AnnService, BatchPolicy
 
 
 def exact_topk(base, queries, k):
@@ -36,6 +39,11 @@ def main():
     ap.add_argument("--nlist", type=int, default=1024)
     ap.add_argument("--nprobe", type=int, default=16)
     ap.add_argument("--pq-m", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--request-size", type=int, default=4,
+                    help="queries per client request")
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "pallas", "xla"])
     args = ap.parse_args()
 
     print(f"dataset: {args.n} x 128 (sift-like)")
@@ -47,29 +55,44 @@ def main():
     idx = IVFIndex(nlist=args.nlist, id_codec="roc", pq=pq,
                    code_codec="polya").build(base, seed=1)
 
+    svc = AnnService(idx, nprobe=args.nprobe, topk=10, engine=args.engine,
+                     policy=BatchPolicy(max_batch=args.max_batch,
+                                        max_wait_s=0.002))
+    # warm the jit caches off the clock (and keep it out of the stats)
+    svc.search(queries[:args.max_batch])
+    svc.reset_stats()
+
+    print(f"serving {args.queries} queries as {args.request_size}-query "
+          f"requests (max_batch={args.max_batch})...")
     t0 = time.perf_counter()
-    ids, _, st = idx.search(queries, nprobe=args.nprobe, topk=10)
+    tickets = [svc.submit(queries[i:i + args.request_size])
+               for i in range(0, len(queries), args.request_size)]
+    svc.flush()  # drain the tail
     wall = time.perf_counter() - t0
+    ids = np.concatenate([t.ids for t in tickets], axis=0)
     recall = np.mean([len(set(ids[i]) & set(gt[i])) / 10
                       for i in range(len(queries))])
 
-    compact_bits = np.ceil(np.log2(args.n))
-    n = args.n
-    ram_unc = n * (64 / 8 + args.pq_m)
-    ram_cmp = (n * idx.bits_per_id() / 8
-               + n * args.pq_m * idx.code_bits_per_element() / 8)
+    st = svc.stats()
+    led = svc.memory_ledger()
     print(f"\nrecall@10 (vs exact): {recall:.3f}")
     print(f"throughput:           {len(queries)/wall:,.0f} QPS "
           f"({wall/len(queries)*1e3:.2f} ms/query)")
-    print(f"id resolve overhead:  {st.id_resolve_s/len(queries)*1e6:.0f} us/query "
-          f"(late resolution, O(topk))")
+    print(f"micro-batching:       {st['batches']:.0f} batches, "
+          f"mean {st['mean_batch']:.1f} q/batch, "
+          f"p99 wait {st['p99_wait_s']*1e3:.2f} ms")
+    print(f"id resolve overhead:  {st['resolve_s']/len(queries)*1e6:.0f} us/query "
+          f"(late resolution, O(topk)); {st['decodes']:.0f} list decodes "
+          f"for {st['queries']:.0f} queries")
     print(f"\nRAM ledger (ids + codes):")
-    print(f"  uncompressed (64b ids):  {ram_unc/1e6:8.1f} MB")
-    print(f"  compact ({compact_bits:.0f}b ids):      "
-          f"{n*(compact_bits/8 + args.pq_m)/1e6:8.1f} MB")
-    print(f"  this server:             {ram_cmp/1e6:8.1f} MB "
+    print(f"  uncompressed (64b ids):  "
+          f"{(led['ids_bytes_unc64'] + led['payload_bytes_unc'])/1e6:8.1f} MB")
+    print(f"  compact ids:             "
+          f"{(led['ids_bytes_compact'] + led['payload_bytes_unc'])/1e6:8.1f} MB")
+    print(f"  this server:             {led['total_bytes']/1e6:8.1f} MB "
           f"({idx.bits_per_id():.2f}b ids, "
-          f"{idx.code_bits_per_element():.2f}b/code-elem)")
+          f"{idx.code_bits_per_element():.2f}b/code-elem, "
+          f"decode cache {led['decoded_cache_bytes']/1e6:.1f} MB)")
 
 
 if __name__ == "__main__":

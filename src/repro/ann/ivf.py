@@ -10,13 +10,18 @@ Search implements the paper's late-id-resolution trick: the scanner keeps
 ``(cluster, offset)`` pairs in the top-k structure and resolves actual ids
 only for the final results — per-cluster decode (ROC/gap), random access
 (EF/compact), or ``select`` (WT).
+
+``search`` is the batched engine (repro.ann.scan): cluster-deduplicated
+blocked scanning through the Pallas kernels with one id-resolution pass
+per call.  ``search_ref`` keeps the original per-query/per-probe Python
+loop as the bit-exact test oracle.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import numpy as np
 
@@ -25,6 +30,8 @@ from ..core.polya import PolyaCodec
 from ..core.wavelet_tree import WaveletTree
 from .kmeans import assign, kmeans
 from .pq import ProductQuantizer
+from .scan import (DecodedListCache, batched_search, coarse_probes,
+                   resolve_ids_batch, score_rows_flat, select_topk)
 
 __all__ = ["IVFIndex", "SearchStats"]
 
@@ -34,6 +41,10 @@ class SearchStats:
     wall_s: float
     ndis: int
     id_resolve_s: float
+    decodes: int = 0           # id-list decode events this call (LRU misses)
+    distinct_probed: int = 0   # distinct clusters probed across the batch
+    batches: int = 0           # query blocks scanned (0 for search_ref)
+    engine: str = "ref"        # "pallas" | "xla" | "ref"
 
 
 @dataclasses.dataclass
@@ -94,7 +105,16 @@ class IVFIndex:
             self._polya = pc
         else:
             self._code_blob = None
+        self._decoded_cache = DecodedListCache()
         return self
+
+    @property
+    def decoded_cache(self) -> DecodedListCache:
+        # lazily attached so indexes built before this field existed
+        # (e.g. unpickled) still work
+        if not hasattr(self, "_decoded_cache"):
+            self._decoded_cache = DecodedListCache()
+        return self._decoded_cache
 
     # -- sizes -------------------------------------------------------------------
     def id_bits(self) -> int:
@@ -112,45 +132,48 @@ class IVFIndex:
 
     # -- id resolution (the §4.1 trick) --------------------------------------------
     def resolve_ids(self, clusters: np.ndarray, offsets: np.ndarray) -> np.ndarray:
-        """(cluster, offset) pairs -> database ids, decoding lazily."""
+        """(cluster, offset) pairs -> database ids, decoding lazily.
+
+        Note: lists were encoded SORTED; the scanner's offsets refer to
+        storage order, so build/searching keeps storage order == sorted
+        order (ids within a cluster are sorted by construction here).
+        Grouped one-pass resolution; stream codecs decode each distinct
+        cluster at most once per call through the index's LRU cache.
+        """
         t0 = time.perf_counter()
-        out = np.zeros(len(clusters), np.int64)
-        if self._wt is not None:
-            for i, (k, o) in enumerate(zip(clusters, offsets)):
-                out[i] = self._wt.select(int(k), int(o))
-        else:
-            # note: lists were encoded SORTED; the scanner's offsets refer to
-            # storage order, so build/searching keeps storage order == sorted
-            # order (ids within a cluster are sorted by construction here).
-            cache: Dict[int, np.ndarray] = {}
-            for i, (k, o) in enumerate(zip(clusters, offsets)):
-                k = int(k)
-                if hasattr(self._blobs[k], "access"):
-                    out[i] = self._blobs[k].access(int(o))
-                    continue
-                if k not in cache:
-                    cache[k] = np.asarray(
-                        self._codec.decode(self._blobs[k], self.n))
-                out[i] = cache[k][int(o)]
+        out = resolve_ids_batch(self, clusters, offsets)
         self._last_resolve_s = time.perf_counter() - t0
         return out
 
     # -- search ---------------------------------------------------------------------
-    def search(self, queries: np.ndarray, nprobe: int = 16, topk: int = 10):
-        """Returns (ids (nq, topk), dists, SearchStats)."""
+    def search(self, queries: np.ndarray, nprobe: int = 16, topk: int = 10,
+               engine: str = "auto", query_block: int = 64):
+        """Batched search (repro.ann.scan). Returns (ids, dists, SearchStats).
+
+        Bit-identical to :meth:`search_ref`; ``engine`` picks the scoring
+        backend ("pallas" kernels, "xla", or "auto" = pallas off-CPU).
+        """
+        return batched_search(self, queries, nprobe=nprobe, topk=topk,
+                              engine=engine, query_block=query_block)
+
+    def search_ref(self, queries: np.ndarray, nprobe: int = 16,
+                   topk: int = 10):
+        """Reference per-query/per-probe scan — the batched engine's oracle.
+
+        Deterministic by construction: shared coarse probe, stable top-k
+        (ties to the earlier candidate in probe order), scalar numpy
+        scoring.  O(nq * nprobe) Python overhead — test/debug use only.
+        """
         t0 = time.perf_counter()
         nq = queries.shape[0]
-        qc = (
-            np.sum(queries**2, 1, keepdims=True)
-            - 2.0 * queries @ self.centroids.T
-            + np.sum(self.centroids**2, 1)[None]
-        )
-        probes = np.argsort(qc, axis=1)[:, :nprobe]
+        probes = coarse_probes(queries, self.centroids, nprobe)
         tables = self.pq.adc_tables(queries) if self.pq is not None else None
         all_ids = np.zeros((nq, topk), np.int64)
         all_d = np.full((nq, topk), np.inf, np.float32)
         ndis = 0
         res_s = 0.0
+        distinct: set = set()
+        decodes0 = self.decoded_cache.decodes
         for qi in range(nq):
             cand_d: List[np.ndarray] = []
             cand_k: List[np.ndarray] = []
@@ -159,20 +182,21 @@ class IVFIndex:
                 lo, hi = self.offsets[k], self.offsets[k + 1]
                 if hi == lo:
                     continue
+                distinct.add(int(k))
                 if self.pq is not None:
                     d = ProductQuantizer.adc_score(self.codes[lo:hi], tables[qi])
                 else:
-                    diff = self.vecs[lo:hi] - queries[qi][None]
-                    d = np.einsum("nd,nd->n", diff, diff)
+                    d = score_rows_flat(self.vecs[lo:hi], queries[qi])
                 ndis += hi - lo
                 cand_d.append(d)
                 cand_k.append(np.full(hi - lo, k, np.int32))
                 cand_o.append(np.arange(hi - lo, dtype=np.int32))
+            if not cand_d:
+                continue
             d = np.concatenate(cand_d)
             kk = np.concatenate(cand_k)
             oo = np.concatenate(cand_o)
-            sel = np.argpartition(d, min(topk, len(d) - 1))[:topk]
-            sel = sel[np.argsort(d[sel])]
+            sel = select_topk(d, topk)
             # late id resolution (paper §4.1)
             ids = self.resolve_ids(kk[sel], oo[sel])
             res_s += self._last_resolve_s
@@ -180,4 +204,7 @@ class IVFIndex:
             all_ids[qi, :n_found] = ids
             all_d[qi, :n_found] = d[sel]
         wall = time.perf_counter() - t0
-        return all_ids, all_d, SearchStats(wall_s=wall, ndis=ndis, id_resolve_s=res_s)
+        return all_ids, all_d, SearchStats(
+            wall_s=wall, ndis=ndis, id_resolve_s=res_s,
+            decodes=self.decoded_cache.decodes - decodes0,
+            distinct_probed=len(distinct), batches=0, engine="ref")

@@ -35,6 +35,19 @@ __all__ = ["get_codec", "CODEC_NAMES", "IdCodec"]
 
 
 class IdCodec:
+    """Codec contract (codified by tests/test_codec_edges.py):
+
+    * ``encode`` accepts any array of unique ids from ``[universe)`` —
+      including the empty set, a single id, and the full universe — in any
+      order; ``decode`` returns them sorted ascending as int64.
+    * ``size_bits(blob) >= 0``, and is 0 only for the empty set (modulo a
+      codec's fixed per-list header).
+    * ``gather(blob, offsets)`` returns the ids at the given sorted-order
+      positions for random-access codecs (EF/compact/uncompressed) and
+      ``None`` for stream codecs (ROC/gap-ANS), which the caller resolves
+      by decoding the whole list once (see repro.ann.scan).
+    """
+
     name: str = "base"
 
     def encode(self, ids: np.ndarray, universe: int):
@@ -45,6 +58,13 @@ class IdCodec:
 
     def size_bits(self, blob) -> int:
         raise NotImplementedError
+
+    def gather(self, blob, offsets: np.ndarray):
+        """Random access: ids at ``offsets`` (positions in sorted order).
+
+        Returns ``None`` when the codec only supports full decode.
+        """
+        return None
 
 
 @dataclasses.dataclass
@@ -64,6 +84,9 @@ class RawCodec(IdCodec):
     def size_bits(self, blob):
         return self.width * blob["n"]
 
+    def gather(self, blob, offsets):
+        return blob["ids"][np.asarray(offsets, dtype=np.int64)]
+
 
 class CompactCodec(IdCodec):
     name = "compact"
@@ -81,6 +104,9 @@ class CompactCodec(IdCodec):
     def size_bits(self, blob):
         return blob["w"] * blob["n"]
 
+    def gather(self, blob, offsets):
+        return blob["ids"][np.asarray(offsets, dtype=np.int64)]
+
 
 class EFCodec(IdCodec):
     name = "ef"
@@ -93,6 +119,10 @@ class EFCodec(IdCodec):
 
     def size_bits(self, blob):
         return blob.size_bits
+
+    def gather(self, blob, offsets):
+        return np.array([blob.access(int(o)) for o in np.asarray(offsets)],
+                        dtype=np.int64)
 
 
 class ROCCodec(IdCodec):

@@ -1,0 +1,33 @@
+"""jax API-drift shims for the distribution layer.
+
+The repo targets the current jax surface (``jax.shard_map``,
+``jax.lax.pvary``, ``jax.set_mesh``); older installs only have the
+``jax.experimental.shard_map`` spelling and no varying-manual-axes (vma)
+type system.  These wrappers pick whichever exists so the same code runs
+on both (mesh-side shims live in repro.launch.mesh).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "pvary"]
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    # the old replication checker predates pvary-annotated carries; the
+    # callers' specs are already explicit, so skip it
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
+def pvary(x, axes):
+    """Mark ``x`` device-varying over ``axes`` (identity on old jax)."""
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axes)
+    return x

@@ -19,9 +19,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["l2_top1_pallas", "BLOCK_Q"]
+__all__ = ["l2_top1_pallas", "l2_dist_pallas", "BLOCK_Q", "BLOCK_N"]
 
 BLOCK_Q = 256
+BLOCK_N = 512
 
 
 def _l2_kernel(q_ref, c_ref, cn_ref, idx_ref, val_ref):
@@ -61,3 +62,42 @@ def l2_top1_pallas(queries: jnp.ndarray, centroids: jnp.ndarray,
         ],
         interpret=interpret,
     )(queries, centroids, cn)
+
+
+def _l2_dist_kernel(q_ref, c_ref, cn_ref, out_ref):
+    q = q_ref[...]                       # (block_q, d)
+    c = c_ref[...]                       # (block_n, d)
+    cn = cn_ref[...]                     # (block_n,)
+    dots = jnp.dot(q, c.T, preferred_element_type=jnp.float32)
+    qn = jnp.sum(q.astype(jnp.float32) ** 2, axis=1, keepdims=True)
+    out_ref[...] = qn - 2.0 * dots + cn[None, :]
+
+
+def l2_dist_pallas(queries: jnp.ndarray, cands: jnp.ndarray,
+                   block_q: int = BLOCK_Q, block_n: int = BLOCK_N,
+                   interpret: bool = True):
+    """queries (NQ, d), cands (N, d) -> full (NQ, N) squared-L2 matrix.
+
+    The batched-IVF scan shape: one query tile against candidate tiles
+    gathered from the deduplicated probed clusters.  Unlike
+    :func:`l2_top1_pallas` the distance tile IS the output (the scan layer
+    does its own per-query masked top-k over a padded candidate block), so
+    the grid is 2-D and each step emits a (block_q, block_n) tile.
+    """
+    nq, d = queries.shape
+    n = cands.shape[0]
+    assert nq % block_q == 0 and n % block_n == 0
+    cn = jnp.sum(cands.astype(jnp.float32) ** 2, axis=1)
+    grid = (nq // block_q, n // block_n)
+    return pl.pallas_call(
+        _l2_dist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nq, n), jnp.float32),
+        interpret=interpret,
+    )(queries, cands, cn)

@@ -1,12 +1,21 @@
-"""Pure-jnp oracle for the L2 top-1 kernel."""
+"""Pure-jnp oracles for the L2 kernels."""
 
 import jax.numpy as jnp
 
 
-def l2_top1_ref(queries, centroids):
-    d = (
+def _l2_matrix(queries, cands):
+    return (
         jnp.sum(queries.astype(jnp.float32) ** 2, 1, keepdims=True)
-        - 2.0 * queries.astype(jnp.float32) @ centroids.astype(jnp.float32).T
-        + jnp.sum(centroids.astype(jnp.float32) ** 2, 1)[None]
+        - 2.0 * queries.astype(jnp.float32) @ cands.astype(jnp.float32).T
+        + jnp.sum(cands.astype(jnp.float32) ** 2, 1)[None]
     )
+
+
+def l2_top1_ref(queries, centroids):
+    d = _l2_matrix(queries, centroids)
     return jnp.argmin(d, 1).astype(jnp.int32), jnp.min(d, 1)
+
+
+def l2_dist_ref(queries, cands):
+    """queries (NQ, d), cands (N, d) -> (NQ, N) f32 distance matrix."""
+    return _l2_matrix(queries, cands)

@@ -10,8 +10,13 @@ from .kernel import BLOCK_N, pq_adc_pallas
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
 def pq_adc(codes, lut, block_n: int = BLOCK_N, interpret: bool = True):
-    """codes (N, m) any int dtype, lut (m, ksub) f32 -> (N,) f32."""
+    """codes (N, m) any int dtype, lut (m, ksub) f32 -> (N,) f32.
+
+    N = 0 short-circuits (Pallas grids must be non-empty).
+    """
     n = codes.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.float32)
     pad = (-n) % block_n
     codes = jnp.pad(codes.astype(jnp.int32), ((0, pad), (0, 0)))
     out = pq_adc_pallas(codes, lut.astype(jnp.float32),

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import SHAPES, get_config, shape_applicable, ARCH_IDS
+from repro.launch.mesh import use_mesh
 from repro.distributed.sharding import (
     batch_shardings,
     cache_shardings,
@@ -102,8 +103,15 @@ def _mem_stats(compiled) -> dict:
     }
 
 
-def _cost_stats(compiled) -> dict:
+def _cost_analysis(compiled) -> dict:
     c = compiled.cost_analysis() or {}
+    if isinstance(c, list):  # old jax returns one dict per computation
+        c = c[0] if c else {}
+    return c
+
+
+def _cost_stats(compiled) -> dict:
+    c = _cost_analysis(compiled)
     return {
         "flops": float(c.get("flops", -1.0)),
         "bytes_accessed": float(c.get("bytes accessed", -1.0)),
@@ -127,7 +135,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, step_kind: str | Non
     params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     p_shard = param_shardings(params_shapes, mesh, cfg.n_experts)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         if kind == "train":
             _, train_step = make_train_step(cfg)
             opt_shapes = jax.eval_shape(init_opt, params_shapes)
@@ -229,7 +237,7 @@ def _lower_probe(cfg, shape, kind, mesh):
     model = build(cfg)
     params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     p_shard = param_shardings(params_shapes, mesh, cfg.n_experts)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         if kind == "train":
             _, step = make_train_step(cfg, unroll=True)
             opt_shapes = jax.eval_shape(init_opt, params_shapes)
@@ -258,7 +266,7 @@ def _lower_probe(cfg, shape, kind, mesh):
                                              batch_shardings(inputs, mesh)),
                          donate_argnums=(1,))
             compiled = jf.lower(params_shapes, cache_shapes, inputs).compile()
-    c = compiled.cost_analysis() or {}
+    c = _cost_analysis(compiled)
     coll = collective_bytes(compiled.as_text())
     return (float(c.get("flops", 0.0)), float(c.get("bytes accessed", 0.0)),
             float(coll["total_bytes"]))

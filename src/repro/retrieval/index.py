@@ -58,8 +58,15 @@ class RetrievalIndex:
                             pq=pq, code_codec=self.code_codec).build(embeddings)
         return self
 
-    def search(self, queries: np.ndarray, nprobe: int = 8, topk: int = 10):
-        return self.ivf.search(queries, nprobe=nprobe, topk=topk)
+    def search(self, queries: np.ndarray, nprobe: int = 8, topk: int = 10,
+               engine: str = "auto"):
+        return self.ivf.search(queries, nprobe=nprobe, topk=topk,
+                               engine=engine)
+
+    def search_ref(self, queries: np.ndarray, nprobe: int = 8,
+                   topk: int = 10):
+        """Per-query oracle scan (see IVFIndex.search_ref)."""
+        return self.ivf.search_ref(queries, nprobe=nprobe, topk=topk)
 
     def stats(self) -> dict:
         return {
@@ -67,4 +74,5 @@ class RetrievalIndex:
             "bits_per_id": self.ivf.bits_per_id(),
             "compact_bits": float(np.ceil(np.log2(self.ivf.n))),
             "code_bits_per_element": self.ivf.code_bits_per_element(),
+            "decoded_cache": self.ivf.decoded_cache.stats(),
         }

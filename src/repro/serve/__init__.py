@@ -1,11 +1,15 @@
-"""Serving surface: prefill/decode step builders and cache utilities.
+"""Serving surface: prefill/decode step builders, cache utilities, and the
+ANN micro-batching service.
 
-The implementations live next to their training counterparts
-(repro.train.step) and the model cache constructors; this package is the
+The LM implementations live next to their training counterparts
+(repro.train.step) and the model cache constructors; the ANN service wraps
+the batched compressed-IVF scan (repro.ann.scan).  This package is the
 stable import point a serving deployment uses.
 """
 
 from ..models.attention import KVCache, init_cache
 from ..train.step import make_prefill_step, make_serve_step
+from .ann_service import AnnService, BatchPolicy, Ticket
 
-__all__ = ["KVCache", "init_cache", "make_prefill_step", "make_serve_step"]
+__all__ = ["KVCache", "init_cache", "make_prefill_step", "make_serve_step",
+           "AnnService", "BatchPolicy", "Ticket"]

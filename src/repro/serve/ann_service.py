@@ -1,0 +1,212 @@
+"""AnnService — request micro-batching over the batched compressed-IVF scan.
+
+The serving deployment the paper motivates: a RAM-resident IVF index with
+losslessly-compressed ids answers nearest-neighbor requests from many
+clients.  Individual requests are small (often one query); the batched
+engine (repro.ann.scan) only pays off when whole query blocks hit the
+kernels together.  This service closes that gap with a max-batch/max-wait
+micro-batching policy:
+
+* ``submit(queries)`` enqueues a request and returns a :class:`Ticket`.
+  A flush is triggered when the pending queue reaches ``max_batch``
+  queries, or when the oldest pending request has waited ``max_wait_s``.
+* ``flush()`` concatenates all pending requests into one query block,
+  runs a single batched search, and splits ids/distances back per ticket
+  (each ticket also records its wait time, batch id and batch size).
+* ``tick()`` lets a driver loop enforce the max-wait deadline without new
+  arrivals (the clock is injectable, so tests are deterministic).
+
+Batching never changes results — the scan layer's batching contract
+guarantees the answer for each query is independent of what it was
+batched with.
+
+The service also keeps a **memory ledger** (:meth:`memory_ledger`):
+compressed id bytes vs the uncompressed/compact layouts, code/vector
+payload, centroids, and the decoded-list LRU cache — the numbers a
+capacity planner needs for "how many replicas fit in this RAM".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["AnnService", "BatchPolicy", "Ticket"]
+
+
+@dataclasses.dataclass
+class BatchPolicy:
+    """Micro-batching knobs: flush at ``max_batch`` queued queries or when
+    the oldest request has waited ``max_wait_s`` seconds."""
+
+    max_batch: int = 64
+    max_wait_s: float = 0.002
+
+
+@dataclasses.dataclass
+class Ticket:
+    """One request's handle; filled in when its batch is flushed."""
+
+    request_id: int
+    n_queries: int
+    enqueued_at: float
+    done: bool = False
+    ids: Optional[np.ndarray] = None
+    dists: Optional[np.ndarray] = None
+    batch_id: int = -1
+    batch_size: int = 0            # total queries in the flushed batch
+    wait_s: float = 0.0            # enqueue -> flush start
+    search_s: float = 0.0          # batch search wall time (shared)
+
+
+class AnnService:
+    """Micro-batching front-end over ``IVFIndex.search``.
+
+    ``clock`` is injectable (defaults to ``time.perf_counter``) so the
+    max-wait policy is testable without sleeping.
+    """
+
+    def __init__(self, index, nprobe: int = 16, topk: int = 10,
+                 policy: Optional[BatchPolicy] = None, engine: str = "auto",
+                 clock: Callable[[], float] = time.perf_counter):
+        self.index = index
+        self.nprobe = nprobe
+        self.topk = topk
+        self.policy = policy or BatchPolicy()
+        self.engine = engine
+        self.clock = clock
+        self._pending: List[Ticket] = []
+        self._pending_q: List[np.ndarray] = []
+        self._next_id = 0
+        self.reset_stats()
+
+    def reset_stats(self) -> None:
+        """Zero the service counters (e.g. after a jit warm-up call)."""
+        self.requests = 0
+        self.queries = 0
+        self.batches = 0
+        self.ndis = 0
+        self.decodes = 0
+        self.search_s = 0.0
+        self.resolve_s = 0.0
+        # bounded: long-lived replicas must not grow per-request state
+        self._batch_sizes: "deque[int]" = deque(maxlen=4096)
+        self._waits: "deque[float]" = deque(maxlen=4096)
+
+    # -- request path --------------------------------------------------------
+    def submit(self, queries: np.ndarray) -> Ticket:
+        """Enqueue one request (``(nq, d)`` or ``(d,)``); may trigger a flush."""
+        queries = np.asarray(queries)
+        if queries.ndim == 1:
+            queries = queries[None]
+        t = Ticket(request_id=self._next_id, n_queries=queries.shape[0],
+                   enqueued_at=self.clock())
+        self._next_id += 1
+        self._pending.append(t)
+        self._pending_q.append(queries)
+        self.requests += 1
+        self.queries += queries.shape[0]
+        if self._pending_total() >= self.policy.max_batch:
+            self.flush()
+        else:
+            self.tick()
+        return t
+
+    def tick(self) -> bool:
+        """Flush if the oldest pending request exceeded the wait budget."""
+        if not self._pending:
+            return False
+        if self.clock() - self._pending[0].enqueued_at >= self.policy.max_wait_s:
+            self.flush()
+            return True
+        return False
+
+    def flush(self) -> List[Ticket]:
+        """Run one batched search over everything pending; complete tickets."""
+        if not self._pending:
+            return []
+        tickets, self._pending = self._pending, []
+        qs, self._pending_q = self._pending_q, []
+        now = self.clock()
+        batch = np.concatenate(qs, axis=0)
+        ids, dists, st = self.index.search(
+            batch, nprobe=self.nprobe, topk=self.topk, engine=self.engine)
+        self.batches += 1
+        self.ndis += st.ndis
+        self.decodes += st.decodes
+        self.search_s += st.wall_s
+        self.resolve_s += st.id_resolve_s
+        self._batch_sizes.append(batch.shape[0])
+        row = 0
+        for t in tickets:
+            t.ids = ids[row: row + t.n_queries]
+            t.dists = dists[row: row + t.n_queries]
+            row += t.n_queries
+            t.done = True
+            t.batch_id = self.batches - 1
+            t.batch_size = batch.shape[0]
+            t.wait_s = max(0.0, now - t.enqueued_at)
+            t.search_s = st.wall_s
+            self._waits.append(t.wait_s)
+        return tickets
+
+    def search(self, queries: np.ndarray):
+        """Synchronous convenience: submit + immediate flush."""
+        t = self.submit(queries)
+        if not t.done:
+            self.flush()
+        return t.ids, t.dists
+
+    def pending(self) -> int:
+        return self._pending_total()
+
+    def _pending_total(self) -> int:
+        return sum(t.n_queries for t in self._pending)
+
+    # -- accounting ----------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        """Counters are lifetime totals; batch/wait distributions cover the
+        last 4096 samples (bounded window)."""
+        bs = np.asarray(self._batch_sizes, np.float64)
+        ws = np.asarray(self._waits, np.float64)
+        return {
+            "requests": self.requests,
+            "queries": self.queries,
+            "batches": self.batches,
+            "mean_batch": float(bs.mean()) if bs.size else 0.0,
+            "max_batch": float(bs.max()) if bs.size else 0.0,
+            "mean_wait_s": float(ws.mean()) if ws.size else 0.0,
+            "p99_wait_s": float(np.quantile(ws, 0.99)) if ws.size else 0.0,
+            "search_s": self.search_s,
+            "resolve_s": self.resolve_s,
+            "ndis": self.ndis,
+            "decodes": self.decodes,
+        }
+
+    def memory_ledger(self) -> Dict[str, float]:
+        """Bytes by component, plus the uncompressed/compact baselines."""
+        idx = self.index
+        n = idx.n
+        id_bytes = idx.id_bits() / 8.0
+        if idx.codes is not None:
+            payload = idx.codes.shape[1] * n * idx.code_bits_per_element() / 8.0
+            payload_unc = idx.codes.nbytes
+        else:
+            payload = payload_unc = idx.vecs.nbytes
+        cache = idx.decoded_cache.stats()
+        return {
+            "n": n,
+            "ids_bytes": id_bytes,
+            "ids_bytes_unc64": 8.0 * n,
+            "ids_bytes_compact": float(np.ceil(np.log2(max(2, n)))) * n / 8.0,
+            "payload_bytes": payload,
+            "payload_bytes_unc": payload_unc,
+            "centroid_bytes": idx.centroids.nbytes,
+            "decoded_cache_bytes": cache["bytes"],
+            "total_bytes": id_bytes + payload + idx.centroids.nbytes
+            + cache["bytes"],
+        }

@@ -1,0 +1,95 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The property-test modules guard their import with::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _compat_hypothesis import given, settings, st
+
+With real hypothesis absent, ``@given`` degrades to a
+``pytest.mark.parametrize`` over a fixed number of deterministic samples
+drawn with a seeded generator from the same strategy bounds — the
+roundtrip properties still execute (over fewer, reproducible cases)
+instead of the whole module failing at collection.
+
+Only the strategy surface those modules use is implemented:
+``st.integers(min, max)`` and ``st.lists(st.integers(...), min_size,
+max_size)``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+_N_CASES = 5
+_SEED = 0xC0DEC5
+
+
+class _Integers:
+    def __init__(self, min_value: int, max_value: int):
+        self.min_value = int(min_value)
+        self.max_value = int(max_value)
+
+    def sample(self, rng: np.random.Generator, edge: bool):
+        if edge:  # first case pins the bounds
+            return self.min_value
+        return int(rng.integers(self.min_value, self.max_value + 1))
+
+
+class _Lists:
+    def __init__(self, elements: _Integers, min_size: int = 0,
+                 max_size: int = 10):
+        self.elements = elements
+        self.min_size = int(min_size)
+        self.max_size = int(max_size)
+
+    def sample(self, rng: np.random.Generator, edge: bool):
+        size = (self.min_size if edge
+                else int(rng.integers(self.min_size, self.max_size + 1)))
+        return [self.elements.sample(rng, False) for _ in range(size)]
+
+
+class st:  # noqa: N801 - mirrors `hypothesis.strategies` usage
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Integers:
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def lists(elements: _Integers, min_size: int = 0,
+              max_size: int = 10) -> _Lists:
+        return _Lists(elements, min_size=min_size, max_size=max_size)
+
+
+def settings(**_kwargs):
+    """No-op stand-in for ``hypothesis.settings``."""
+
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+def given(*strategies):
+    """Parametrize over deterministic samples of the given strategies."""
+
+    def deco(fn):
+        rng = np.random.default_rng(_SEED)
+        cases = [
+            tuple(s.sample(rng, edge=(i == 0)) for s in strategies)
+            for i in range(_N_CASES)
+        ]
+
+        # NOTE: no functools.wraps — pytest would follow __wrapped__ to the
+        # original signature and treat the strategy args as fixtures.
+        @pytest.mark.parametrize("_compat_case", cases,
+                                 ids=[f"case{i}" for i in range(len(cases))])
+        def wrapper(_compat_case):
+            return fn(*_compat_case)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

@@ -1,0 +1,24 @@
+"""Shared test configuration.
+
+* Auto-applies the ``slow`` marker (see pytest.ini) to the JAX model
+  modules — per-arch smoke tests, train/serve drivers, and the
+  multi-device subprocess suite — so the default run stays fast.
+  Individual tests elsewhere can still opt in with ``@pytest.mark.slow``.
+"""
+
+import pytest
+
+# NOTE: test_distributed is not listed — in-process it self-skips (single
+# device) and the test_multidevice subprocess (which IS slow-marked) must
+# still select it despite the default `-m "not slow"` addopts.
+SLOW_MODULES = {
+    "test_arch_smoke",
+    "test_checkpoint_train",
+    "test_multidevice",
+}
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        if item.module.__name__ in SLOW_MODULES:
+            item.add_marker(pytest.mark.slow)

@@ -1,0 +1,121 @@
+"""Deterministic codec edge cases — the ``IdCodec`` contract, no hypothesis.
+
+Codifies what every registry codec must do with the degenerate inputs the
+index layer can produce: the empty list, a single id, the full universe,
+``universe == 1``, plus blob-level byte-exactness for the stream codecs
+(ROC / gap-ANS) and the ``size_bits`` accounting contract.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.codecs import CODEC_NAMES, get_codec
+from repro.core.wavelet_tree import WaveletTree
+
+EDGE_CASES = [
+    ("empty", np.zeros(0, np.int64), 100),
+    ("single", np.array([7], np.int64), 100),
+    ("single-last", np.array([99], np.int64), 100),
+    ("full-universe", np.arange(50, dtype=np.int64), 50),
+    ("universe-1", np.array([0], np.int64), 1),
+    ("two-adjacent", np.array([41, 40], np.int64), 100),  # unsorted input
+]
+
+
+@pytest.mark.parametrize("name", CODEC_NAMES)
+@pytest.mark.parametrize("label,ids,universe",
+                         EDGE_CASES, ids=[c[0] for c in EDGE_CASES])
+def test_codec_edge_roundtrip(name, label, ids, universe):
+    codec = get_codec(name)
+    blob = codec.encode(ids, universe)
+    out = np.asarray(codec.decode(blob, universe))
+    np.testing.assert_array_equal(out, np.sort(ids))
+    assert out.dtype == np.int64 or out.size == 0
+
+
+@pytest.mark.parametrize("name", CODEC_NAMES)
+@pytest.mark.parametrize("label,ids,universe",
+                         EDGE_CASES, ids=[c[0] for c in EDGE_CASES])
+def test_codec_size_bits_contract(name, label, ids, universe):
+    """size_bits is a non-negative payload figure, exact for word codecs."""
+    codec = get_codec(name)
+    blob = codec.encode(ids, universe)
+    bits = codec.size_bits(blob)
+    assert bits >= 0
+    n = len(ids)
+    if name == "unc64":
+        assert bits == 64 * n
+    elif name == "unc32":
+        assert bits == 32 * n
+    elif name == "compact":
+        import math
+
+        assert bits == max(1, math.ceil(math.log2(max(2, universe)))) * n
+
+
+@pytest.mark.parametrize("name", CODEC_NAMES)
+@pytest.mark.parametrize("label,ids,universe",
+                         EDGE_CASES, ids=[c[0] for c in EDGE_CASES])
+def test_codec_gather_contract(name, label, ids, universe):
+    """Random-access codecs gather sorted-position offsets; stream codecs
+    return None (callers decode through the LRU cache instead)."""
+    codec = get_codec(name)
+    blob = codec.encode(ids, universe)
+    offs = np.arange(len(ids), dtype=np.int64)
+    got = codec.gather(blob, offs)
+    if name in ("roc", "gap_ans"):
+        assert got is None
+    else:
+        np.testing.assert_array_equal(got, np.sort(ids))
+
+
+@pytest.mark.parametrize("n,universe", [(0, 10), (1, 10), (37, 1000),
+                                        (256, 256)])
+def test_roc_blob_byte_exact_roundtrip(n, universe):
+    """encode -> decode -> encode reproduces the exact ANS byte stream."""
+    rng = np.random.default_rng(6)
+    ids = rng.choice(universe, size=n, replace=False)
+    codec = get_codec("roc")
+    blob = codec.encode(ids, universe)
+    out = codec.decode(blob, universe)
+    blob2 = codec.encode(out, universe)
+    assert blob["state"] == blob2["state"]
+    assert blob["n"] == blob2["n"]
+
+
+@pytest.mark.parametrize("n,universe", [(0, 10), (1, 10), (37, 1000),
+                                        (900, 1000)])
+def test_gap_ans_blob_byte_exact_roundtrip(n, universe):
+    rng = np.random.default_rng(7)
+    ids = rng.choice(universe, size=n, replace=False)
+    codec = get_codec("gap_ans")
+    blob = codec.encode(ids, universe)
+    out = codec.decode(blob, universe)
+    blob2 = codec.encode(out, universe)
+    np.testing.assert_array_equal(blob["heads"], blob2["heads"])
+    np.testing.assert_array_equal(blob["words"], blob2["words"])
+    assert blob["k"] == blob2["k"] and blob["n"] == blob2["n"]
+
+
+# ---------------------------------------------------------------------------
+# wavelet-tree edges (the joint structure is not in the registry)
+# ---------------------------------------------------------------------------
+
+def test_wavelet_tree_single_symbol_universe():
+    wt = WaveletTree.build(np.zeros(10, np.int64), 1)
+    assert wt.cluster_size(0) == 10
+    assert [wt.select(0, i) for i in range(10)] == list(range(10))
+
+
+def test_wavelet_tree_empty_cluster():
+    s = np.array([0, 0, 2, 2, 2, 0])
+    wt = WaveletTree.build(s, 3)
+    assert wt.cluster_size(1) == 0
+    np.testing.assert_array_equal(wt.decode_cluster(1),
+                                  np.zeros(0, np.int64))
+    np.testing.assert_array_equal(wt.decode_cluster(2), [2, 3, 4])
+
+
+def test_wavelet_tree_empty_string():
+    wt = WaveletTree.build(np.zeros(0, np.int64), 4)
+    assert wt.size_bits == 0 and wt.length == 0

@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # hypothesis is optional (tests/requirements-test.txt): without it the
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # properties run over deterministic seeded samples
+    from _compat_hypothesis import given, settings, st
 
 from repro.core.ans import BigANS, StreamANS
 from repro.core.vrans import VRansDecoder, VRansEncoder

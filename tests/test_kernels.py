@@ -8,7 +8,7 @@ import pytest
 
 from repro.core.vrans import VRans16Encoder, VRans16Decoder
 from repro.kernels.pq_adc import pq_adc, pq_adc_ref
-from repro.kernels.l2_topk import l2_top1, l2_top1_ref
+from repro.kernels.l2_topk import l2_dist, l2_dist_ref, l2_top1, l2_top1_ref
 from repro.kernels.rans_decode import make_tables, rans_decode, rans_decode_ref
 from repro.kernels.wt_rank import pack_bits_u32, wt_rank, wt_rank_ref
 
@@ -45,6 +45,20 @@ def test_pq_adc_against_numpy_pq():
     np.testing.assert_allclose(ker, ref, rtol=1e-4)
 
 
+@pytest.mark.parametrize("n", [0, 1, 1023, 1024, 1025])
+def test_pq_adc_padding_edges(n):
+    """N = 0, N < block, N == block, N not a multiple of BLOCK_N."""
+    rng = np.random.default_rng(30)
+    codes = jnp.asarray(rng.integers(0, 256, size=(n, 8)), jnp.int32)
+    lut = jnp.asarray(rng.random((8, 256), np.float32))
+    out = pq_adc(codes, lut)
+    assert out.shape == (n,)
+    if n:
+        ref = pq_adc_ref(codes, lut)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # l2_topk
 # ---------------------------------------------------------------------------
@@ -60,6 +74,43 @@ def test_l2_top1_matches_ref(nq, k, d, dtype):
     np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
     np.testing.assert_allclose(np.asarray(val), np.asarray(rval),
                                rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("nq", [0, 1, 255, 256, 257])
+def test_l2_top1_padding_edges(nq):
+    rng = np.random.default_rng(31)
+    q = jnp.asarray(rng.standard_normal((nq, 24)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((77, 24)), jnp.float32)
+    idx, val = l2_top1(q, c)
+    assert idx.shape == (nq,) and val.shape == (nq,)
+    if nq:
+        ridx, rval = l2_top1_ref(q, c)
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+        np.testing.assert_allclose(np.asarray(val), np.asarray(rval),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("nq,n", [(3, 100), (64, 512), (65, 513),
+                                  (256, 511), (1, 1)])
+@pytest.mark.parametrize("d", [16, 128, 130])
+def test_l2_dist_matches_ref(nq, n, d):
+    """The batched-scan distance-matrix kernel vs the jnp oracle."""
+    rng = np.random.default_rng(32)
+    q = jnp.asarray(rng.standard_normal((nq, d)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    out = l2_dist(q, c)
+    ref = l2_dist_ref(q, c)
+    assert out.shape == (nq, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("nq,n", [(0, 10), (10, 0), (0, 0)])
+def test_l2_dist_empty_edges(nq, n):
+    q = jnp.zeros((nq, 8), jnp.float32)
+    c = jnp.zeros((n, 8), jnp.float32)
+    out = l2_dist(q, c)
+    assert out.shape == (nq, n)
 
 
 # ---------------------------------------------------------------------------

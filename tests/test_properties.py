@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # hypothesis is optional (tests/requirements-test.txt): without it the
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # properties run over deterministic seeded samples
+    from _compat_hypothesis import given, settings, st
 
 from repro.core.ans import StreamANS
 from repro.core.elias_fano import EliasFano

@@ -1,0 +1,211 @@
+"""Batched-scan parity: ``IVFIndex.search`` must be bit-identical to the
+``search_ref`` oracle — ids AND distances — for every id codec, both
+scoring engines, with and without PQ, and across batching edge cases.
+Also covers the decode-count invariant and the AnnService micro-batcher.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.ann.ivf import IVFIndex
+from repro.ann.pq import ProductQuantizer
+from repro.serve.ann_service import AnnService, BatchPolicy
+
+jax.config.update("jax_platforms", "cpu")
+
+ALL_CODECS = ["unc64", "compact", "ef", "roc", "gap_ans", "wt", "wt1"]
+ENGINES = ["xla", "pallas"]
+
+
+def _data(n=2000, d=32, nq=25, seed=0):
+    rng = np.random.default_rng(seed)
+    base = rng.standard_normal((n, d)).astype(np.float32)
+    queries = rng.standard_normal((nq, d)).astype(np.float32)
+    return base, queries
+
+
+@pytest.fixture(scope="module")
+def data():
+    return _data()
+
+
+def _assert_parity(idx, queries, nprobe, topk, engine="xla", **kw):
+    ids_r, d_r, st_r = idx.search_ref(queries, nprobe=nprobe, topk=topk)
+    ids_b, d_b, st_b = idx.search(queries, nprobe=nprobe, topk=topk,
+                                  engine=engine, **kw)
+    np.testing.assert_array_equal(ids_b, ids_r)
+    np.testing.assert_array_equal(d_b, d_r)       # exact, not allclose
+    assert st_b.ndis == st_r.ndis
+    return st_b
+
+
+@pytest.mark.parametrize("codec", ALL_CODECS)
+def test_flat_parity_all_codecs(data, codec):
+    base, queries = data
+    idx = IVFIndex(nlist=24, id_codec=codec).build(base, seed=1)
+    _assert_parity(idx, queries, nprobe=6, topk=10)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_flat_parity_engines(data, engine):
+    base, queries = data
+    idx = IVFIndex(nlist=24, id_codec="roc").build(base, seed=1)
+    _assert_parity(idx, queries, nprobe=6, topk=10, engine=engine)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("codec", ["roc", "wt"])
+def test_pq_parity(data, codec, engine):
+    base, queries = data
+    pq = ProductQuantizer(m=8, bits=8)
+    idx = IVFIndex(nlist=16, id_codec=codec, pq=pq).build(base, seed=1)
+    _assert_parity(idx, queries[:12], nprobe=5, topk=8, engine=engine)
+
+
+@pytest.mark.parametrize("codec", ["roc", "ef", "wt1"])
+def test_nprobe_exceeds_nlist(data, codec):
+    base, queries = data
+    idx = IVFIndex(nlist=8, id_codec=codec).build(base, seed=2)
+    _assert_parity(idx, queries[:10], nprobe=50, topk=7)
+
+
+@pytest.mark.parametrize("codec", ["roc", "gap_ans", "wt"])
+def test_clusters_smaller_than_topk(codec):
+    base, queries = _data(n=60, d=16, nq=10, seed=3)
+    idx = IVFIndex(nlist=16, id_codec=codec).build(base, seed=3)
+    # topk > typical cluster size; some queries may find < topk candidates
+    _assert_parity(idx, queries, nprobe=2, topk=9)
+
+
+def test_near_duplicate_tie_boundary():
+    """Many near-duplicates collapse to one f32 kernel distance; the
+    shortlist must extend through the tie so the exact re-score still
+    recovers the oracle's top-k."""
+    rng = np.random.default_rng(8)
+    v = rng.standard_normal(16).astype(np.float32)
+    dupes = v[None] + 1e-7 * rng.standard_normal((40, 16)).astype(np.float32)
+    rest = rng.standard_normal((400, 16)).astype(np.float32) + 4.0
+    base = np.concatenate([dupes, rest]).astype(np.float32)
+    idx = IVFIndex(nlist=4, id_codec="roc").build(base, seed=9)
+    _assert_parity(idx, v[None], nprobe=4, topk=10)
+    # exact duplicates too (ties in BOTH paths -> stable position order)
+    base2 = np.concatenate([np.repeat(v[None], 40, 0), rest]).astype(np.float32)
+    idx2 = IVFIndex(nlist=4, id_codec="wt").build(base2, seed=9)
+    _assert_parity(idx2, v[None], nprobe=4, topk=10)
+
+
+def test_query_block_invariance(data):
+    """Results are independent of how queries are blocked (batching contract)."""
+    base, queries = data
+    idx = IVFIndex(nlist=24, id_codec="roc").build(base, seed=1)
+    ref = idx.search(queries, nprobe=6, topk=5, query_block=64)
+    for qb in (1, 3, 7):
+        got = idx.search(queries, nprobe=6, topk=5, query_block=qb)
+        np.testing.assert_array_equal(got[0], ref[0])
+        np.testing.assert_array_equal(got[1], ref[1])
+
+
+def test_decode_count_bounded_by_distinct_probed(data):
+    """Cold cache: each distinct probed cluster is decoded at most once per
+    call; warm cache: zero decodes."""
+    base, queries = data
+    idx = IVFIndex(nlist=24, id_codec="roc").build(base, seed=1)
+    idx.decoded_cache.clear()
+    _, _, st = idx.search(queries, nprobe=6, topk=5)
+    assert 0 < st.decodes <= st.distinct_probed
+    _, _, st2 = idx.search(queries, nprobe=6, topk=5)
+    assert st2.decodes == 0
+    assert idx.decoded_cache.stats()["hits"] > 0
+
+
+def test_decoded_cache_eviction():
+    from repro.ann.scan import DecodedListCache
+
+    cache = DecodedListCache(max_bytes=3 * 80)  # room for ~3 10-elem int64
+    for k in range(6):
+        cache.get(k, lambda k=k: np.full(10, k, np.int64))
+    assert cache.bytes <= 3 * 80
+    assert cache.evictions > 0
+    # most-recent entry survives: decode must NOT be called again
+    def boom():
+        raise AssertionError("unexpected decode of a cached entry")
+
+    assert cache.get(5, boom)[0] == 5
+
+
+def test_resolve_ids_empty_input(data):
+    base, _ = data
+    for codec in ["roc", "ef", "wt"]:
+        idx = IVFIndex(nlist=8, id_codec=codec).build(base, seed=4)
+        out = idx.resolve_ids(np.zeros(0, np.int64), np.zeros(0, np.int64))
+        assert out.shape == (0,) and out.dtype == np.int64
+
+
+def test_resolve_ids_batch_matches_scalar(data):
+    base, _ = data
+    for codec in ["roc", "ef", "compact", "wt"]:
+        idx = IVFIndex(nlist=16, id_codec=codec).build(base, seed=4)
+        rng = np.random.default_rng(5)
+        ks = rng.integers(0, 16, size=64)
+        offs = np.array([rng.integers(0, max(1, idx.sizes[k])) for k in ks])
+        keep = idx.sizes[ks] > 0
+        ks, offs = ks[keep], offs[keep]
+        got = idx.resolve_ids(ks, offs)
+        want = np.array([np.sort(idx._lists[k])[o] for k, o in zip(ks, offs)])
+        np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# AnnService
+# ---------------------------------------------------------------------------
+
+def test_service_results_match_oracle(data):
+    base, queries = data
+    idx = IVFIndex(nlist=24, id_codec="roc").build(base, seed=1)
+    now = [0.0]
+    svc = AnnService(idx, nprobe=6, topk=5, engine="xla",
+                     policy=BatchPolicy(max_batch=8, max_wait_s=0.01),
+                     clock=lambda: now[0])
+    tickets = []
+    for i in range(0, len(queries), 3):
+        tickets.append(svc.submit(queries[i:i + 3]))
+        now[0] += 0.004
+    svc.flush()
+    assert all(t.done for t in tickets)
+    got = np.concatenate([t.ids for t in tickets], axis=0)
+    ref_ids, _, _ = idx.search_ref(queries, nprobe=6, topk=5)
+    np.testing.assert_array_equal(got, ref_ids)
+    st = svc.stats()
+    assert st["queries"] == len(queries)
+    assert st["batches"] >= 2  # micro-batching actually grouped requests
+
+
+def test_service_batch_policy(data):
+    base, queries = data
+    idx = IVFIndex(nlist=24, id_codec="roc").build(base, seed=1)
+    now = [0.0]
+    svc = AnnService(idx, nprobe=6, topk=5, engine="xla",
+                     policy=BatchPolicy(max_batch=4, max_wait_s=1.0),
+                     clock=lambda: now[0])
+    t1 = svc.submit(queries[:2])
+    assert not t1.done and svc.pending() == 2      # under both limits
+    t2 = svc.submit(queries[2:4])                  # hits max_batch
+    assert t1.done and t2.done and t1.batch_size == 4
+    t3 = svc.submit(queries[4:5])
+    assert not t3.done
+    now[0] += 2.0                                  # exceed max_wait
+    assert svc.tick() and t3.done
+    assert t3.wait_s >= 1.0
+
+
+def test_service_memory_ledger(data):
+    base, queries = data
+    idx = IVFIndex(nlist=24, id_codec="roc").build(base, seed=1)
+    svc = AnnService(idx, nprobe=6, topk=5, engine="xla")
+    svc.search(queries[:8])
+    led = svc.memory_ledger()
+    assert led["ids_bytes"] < led["ids_bytes_compact"] < led["ids_bytes_unc64"]
+    assert led["total_bytes"] > 0
+    assert led["decoded_cache_bytes"] >= 0

@@ -9,6 +9,7 @@ from repro.launch.serve import main as serve_main
 from repro.retrieval.index import RetrievalIndex
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["gemma3-1b", "zamba2-2.7b", "xlstm-1.3b",
                                   "olmoe-1b-7b", "whisper-medium", "qwen2-vl-7b"])
 def test_serve_driver_generates(arch):
@@ -18,6 +19,7 @@ def test_serve_driver_generates(arch):
     assert np.isfinite(out).all()
 
 
+@pytest.mark.slow
 def test_serve_decode_is_deterministic():
     a = serve_main(["--arch", "gemma3-1b", "--reduced", "--batch", "2",
                     "--prompt-len", "4", "--gen", "8"])
