@@ -14,12 +14,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", nargs="*", default=None,
-                    help="subset: table1 table2 table3 table4 fig3 moe codec roofline")
+                    help="subset: table1 table2 table3 table4 fig3 moe codec "
+                         "roofline spec")
+    ap.add_argument("--spec", action="append", default=None,
+                    help="factory spec string for the 'spec' suite "
+                         "(repeatable); implies --only spec when --only is "
+                         "not given")
     args = ap.parse_args()
 
     from . import (codec_speed, fig3_code_compression, moe_routing, roofline,
-                   table1_bpe, table2_search_time, table3_offline_graph,
-                   table4_large_scale)
+                   spec_bench, table1_bpe, table2_search_time,
+                   table3_offline_graph, table4_large_scale)
 
     suites = {
         "table1": table1_bpe.main,
@@ -30,8 +35,11 @@ def main() -> None:
         "moe": moe_routing.main,
         "codec": codec_speed.main,
         "roofline": roofline.main,
+        "spec": lambda quick=False: spec_bench.main(quick=quick,
+                                                    specs=args.spec),
     }
-    chosen = args.only or list(suites)
+    chosen = args.only or (["spec"] if args.spec else
+                           [n for n in suites if n != "spec"])
     for name in chosen:
         t0 = time.time()
         print(f"# --- {name} ---", flush=True)

@@ -1,0 +1,93 @@
+"""Generic factory-spec benchmark — sweep any point of the codec×structure
+matrix from the command line.
+
+One ``--spec`` string (repeatable) names the index; for each spec this
+builds it through ``repro.api.index_factory``, times a batched search,
+round-trips the RIDX v2 container, and reports bits/id (or bits/edge),
+QPS, decode counts and the memory ledger.  This is the "one flag sweeps
+the paper's tables" entry point:
+
+    PYTHONPATH=src python -m benchmarks.run --only spec \\
+        --spec "IVF1024,PQ8x8,ids=roc,codes=polya" --spec "NSG16,ids=ef"
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.api import index_factory, load_index, save_index
+from repro.data.synthetic import make_dataset
+
+from .common import Timer, emit, save_result
+
+DEFAULT_SPECS = (
+    "Flat",
+    "IVF256,ids=roc",
+    "IVF256,ids=wt",
+    "IVF256,PQ8x8,ids=roc,codes=polya",
+    "NSG16,ids=roc",
+)
+
+N_IVF = 100_000
+N_GRAPH = 5_000
+NQ = 200
+
+
+def run_spec(spec: str, quick: bool = False) -> dict:
+    idx = index_factory(spec)
+    is_graph = hasattr(idx, "graph")
+    n = (N_GRAPH if is_graph else N_IVF) // (10 if quick else 1)
+    nq = NQ // (4 if quick else 1)
+    base, queries = make_dataset("sift-like", n, nq, seed=0)
+
+    with Timer() as t_build:
+        idx.build(base, seed=1)
+    # warm jit caches off the clock
+    idx.search(queries[:32], k=10)
+    with Timer() as t_search:
+        dists, ids, st = idx.search(queries, k=10)
+
+    with Timer() as t_save:
+        blob = save_index(idx)
+    idx2 = load_index(blob)
+    d2, i2, _ = idx2.search(queries, k=10)
+    lossless = bool(np.array_equal(ids, i2) and np.array_equal(dists, d2))
+
+    led = idx.memory_ledger()
+    out = {
+        "spec": idx.spec,
+        "n": n,
+        "build_s": t_build.s,
+        "search_s": t_search.s,
+        "us_per_query": t_search.s / nq * 1e6,
+        "ndis": st.ndis,
+        "decodes": st.decodes,
+        "engine": st.engine,
+        "container_bytes": len(blob),
+        "pack_s": t_save.s,
+        "reload_bit_identical": lossless,
+        "ledger": led,
+    }
+    if is_graph:
+        out["bits_per_edge"] = idx.graph.bits_per_edge()
+    elif hasattr(idx, "ivf"):
+        out["bits_per_id"] = idx.ivf.bits_per_id()
+    return out
+
+
+def main(quick: bool = False, specs=None):
+    rows = {}
+    for spec in specs or DEFAULT_SPECS:
+        rows[spec] = run_spec(spec, quick=quick)
+        r = rows[spec]
+        rate = r.get("bits_per_id", r.get("bits_per_edge", 0.0))
+        emit(f"spec/{spec}", r["us_per_query"],
+             f"{rate:.2f}b,{r['container_bytes']}B,"
+             f"lossless={r['reload_bit_identical']}")
+        assert r["reload_bit_identical"], f"{spec}: reload changed results"
+    save_result("spec_bench", {"rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -17,8 +17,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.ann.ivf import IVFIndex
-from repro.ann.pq import ProductQuantizer
+from repro.api import index_factory
 from repro.data.synthetic import make_dataset
 
 from .common import DATASETS, emit, save_result
@@ -42,23 +41,25 @@ def _coarse(base, nlist, preset):
 
 def run_config(base, queries, nlist, codec, pq_m=0, pq_bits=8, reps=2,
                preset="", engine="auto"):
-    pq = ProductQuantizer(m=pq_m, bits=pq_bits) if pq_m else None
-    idx = IVFIndex(nlist=nlist, id_codec=codec, pq=pq).build(
+    spec = f"IVF{nlist}" + (f",PQ{pq_m}x{pq_bits}" if pq_m else "") \
+        + f",ids={codec}"
+    idx = index_factory(spec).build(
         base, seed=1, centroids=_coarse(base, nlist, preset))
     # warm the jit caches off the clock, then time cold-decode reps
-    idx.search(queries[:64], nprobe=16, topk=10, engine=engine)
+    idx.search(queries[:64], k=10, nprobe=16, engine=engine)
     walls, res, decodes, distinct = [], [], [], []
     for _ in range(reps):
-        idx.decoded_cache.clear()
-        _, _, st = idx.search(queries, nprobe=16, topk=10, engine=engine)
+        idx.ivf.decoded_cache.clear()
+        _, _, st = idx.search(queries, k=10, nprobe=16, engine=engine)
         walls.append(st.wall_s)
         res.append(st.id_resolve_s)
         decodes.append(st.decodes)
         distinct.append(st.distinct_probed)
     return {
+        "spec": idx.spec,
         "wall_s": float(np.median(walls)),
         "id_resolve_s": float(np.median(res)),
-        "bits_per_id": idx.bits_per_id(),
+        "bits_per_id": idx.ivf.bits_per_id(),
         "decodes": int(np.median(decodes)),
         "distinct_probed": int(np.median(distinct)),
         "engine": engine,

@@ -14,8 +14,7 @@ import math
 
 import numpy as np
 
-from repro.core import BigANS, roc_push_set
-from repro.core.elias_fano import EliasFano
+from repro.core import get_codec
 
 from .common import emit, save_result
 
@@ -25,19 +24,21 @@ def roc_formula_bpe(n_total: int, n_k: float) -> float:
 
 
 def measured_anchor(n: int = 1_000_000, k: int = 1 << 10, seed: int = 0):
-    """Measure ROC and EF at N_k ~= n/k on a uniform random partition."""
+    """Measure ROC and EF at N_k ~= n/k on a uniform random partition.
+
+    Goes through the ``repro.core.codecs`` registry — the exact payloads
+    a factory-built ``IVF<k>,ids=roc|ef`` index stores per cluster — so
+    the anchor measures the served representation, not a bespoke loop
+    (pre-batched-API call patterns removed).
+    """
     rng = np.random.default_rng(seed)
     a = rng.integers(0, k, size=n)
     order = np.argsort(a, kind="stable")
     sizes = np.bincount(a, minlength=k)
     lists = np.split(order, np.cumsum(sizes)[:-1])
-    roc_bits = 0
-    ef_bits = 0
-    for l in lists:
-        s = BigANS()
-        roc_push_set(s, l, n)
-        roc_bits += s.bits
-        ef_bits += EliasFano.encode(l, n).size_bits
+    roc, ef = get_codec("roc"), get_codec("ef")
+    roc_bits = sum(roc.size_bits(roc.encode(l, n)) for l in lists)
+    ef_bits = sum(ef.size_bits(ef.encode(l, n)) for l in lists)
     return roc_bits / n, ef_bits / n, float(np.mean(sizes))
 
 

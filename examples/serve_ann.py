@@ -1,14 +1,16 @@
-"""End-to-end driver: serve an ANN index with compressed ids (batched).
+"""End-to-end driver: serve any factory-built ANN index (batched).
 
-The paper's deployment scenario: a RAM-resident IVF index answers
-nearest-neighbor requests; vector ids are ROC-compressed, PQ codes
-Polya-compressed, and id resolution is deferred to the final top-k (§4.1).
-Requests stream through :class:`repro.serve.AnnService`, which micro-batches
-them (max-batch/max-wait policy) into the blocked scan engine
-(repro.ann.scan).  Reports recall@10 vs exact search, QPS, batching and
-decode stats, and the RAM ledger vs the uncompressed layout.
+The paper's deployment scenario: a RAM-resident index answers
+nearest-neighbor requests; vector ids are losslessly compressed and id
+resolution is deferred to the final top-k (§4.1).  The index is built
+from one ``--spec`` factory string (IVF, NSG/HNSW or Flat) and requests
+stream through :class:`repro.serve.AnnService`, which micro-batches them
+(max-batch/max-wait policy) into the index's search engine.  Reports
+recall@10 vs exact search, QPS, batching and decode stats, and the RAM
+ledger vs the uncompressed layout.
 
     PYTHONPATH=src python examples/serve_ann.py [--n 200000] [--queries 2000]
+    PYTHONPATH=src python examples/serve_ann.py --spec "IVF512,ids=ef" --cache-mb 16
 """
 
 import argparse
@@ -16,8 +18,7 @@ import time
 
 import numpy as np
 
-from repro.ann.ivf import IVFIndex
-from repro.ann.pq import ProductQuantizer
+from repro.api import index_factory
 from repro.data.synthetic import make_dataset
 from repro.serve import AnnService, BatchPolicy
 
@@ -32,35 +33,58 @@ def exact_topk(base, queries, k):
     return out
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=200_000)
     ap.add_argument("--queries", type=int, default=1_000)
+    ap.add_argument("--spec", default=None,
+                    help="factory spec (default: IVF<nlist>,PQ<pq-m>x8,"
+                         "ids=roc,codes=polya); e.g. 'NSG16,ids=roc'")
     ap.add_argument("--nlist", type=int, default=1024)
     ap.add_argument("--nprobe", type=int, default=16)
+    ap.add_argument("--ef", type=int, default=32,
+                    help="beam width for graph specs")
     ap.add_argument("--pq-m", type=int, default=8)
+    ap.add_argument("--cache-mb", type=float, default=None,
+                    help="decoded-list cache budget (MB); default 64")
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--request-size", type=int, default=4,
                     help="queries per client request")
     ap.add_argument("--engine", default="auto",
                     choices=["auto", "pallas", "xla"])
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     print(f"dataset: {args.n} x 128 (sift-like)")
     base, queries = make_dataset("sift-like", args.n, args.queries, seed=0)
     gt = exact_topk(base, queries, 10)
 
-    print("building compressed index (ROC ids + Polya PQ codes)...")
-    pq = ProductQuantizer(m=args.pq_m, bits=8)
-    idx = IVFIndex(nlist=args.nlist, id_codec="roc", pq=pq,
-                   code_codec="polya").build(base, seed=1)
+    spec = args.spec or f"IVF{args.nlist},PQ{args.pq_m}x8,ids=roc,codes=polya"
+    print(f"building index: {spec}")
+    idx = index_factory(spec).build(base, seed=1)
+    is_graph = hasattr(idx, "graph")
+    is_ivf = hasattr(idx, "ivf")
 
-    svc = AnnService(idx, nprobe=args.nprobe, topk=10, engine=args.engine,
+    if is_graph:
+        search_opts = {"ef": args.ef}
+    elif is_ivf:
+        search_opts = {"nprobe": args.nprobe, "engine": args.engine}
+    else:  # Flat takes no per-search knobs
+        search_opts = {}
+    svc = AnnService(idx, topk=10, cache_mb=args.cache_mb,
                      policy=BatchPolicy(max_batch=args.max_batch,
-                                        max_wait_s=0.002))
+                                        max_wait_s=0.002),
+                     **search_opts)
     # warm the jit caches off the clock (and keep it out of the stats)
-    svc.search(queries[:args.max_batch])
+    svc.search(queries[: args.max_batch])
     svc.reset_stats()
+
+    if is_graph:
+        per_id = f"{idx.graph.bits_per_edge():.2f}b/edge"
+    elif is_ivf:
+        per_id = (f"{idx.ivf.bits_per_id():.2f}b ids, "
+                  f"{idx.ivf.code_bits_per_element():.2f}b/code-elem")
+    else:
+        per_id = "raw f32 vectors"
 
     print(f"serving {args.queries} queries as {args.request_size}-query "
           f"requests (max_batch={args.max_batch})...")
@@ -90,9 +114,7 @@ def main():
     print(f"  compact ids:             "
           f"{(led['ids_bytes_compact'] + led['payload_bytes_unc'])/1e6:8.1f} MB")
     print(f"  this server:             {led['total_bytes']/1e6:8.1f} MB "
-          f"({idx.bits_per_id():.2f}b ids, "
-          f"{idx.code_bits_per_element():.2f}b/code-elem, "
-          f"decode cache {led['decoded_cache_bytes']/1e6:.1f} MB)")
+          f"({per_id}, decode cache {led['decoded_cache_bytes']/1e6:.1f} MB)")
 
 
 if __name__ == "__main__":

@@ -63,8 +63,8 @@ def main():
     emb = embed_corpus(cfg, params, batches)
     print(f"  embeddings: {emb.shape}")
 
-    print("[3/4] building RetrievalIndex (ROC ids)...")
-    ri = RetrievalIndex(nlist=64, id_codec="roc").build(emb)
+    print("[3/4] building RetrievalIndex (factory spec: IVF64,ids=roc)...")
+    ri = RetrievalIndex(spec="IVF64,ids=roc").build(emb)
     stats = ri.stats()
     print(f"  ids: {stats['bits_per_id']:.2f} bits/id "
           f"(compact would be {stats['compact_bits']:.0f})")

@@ -22,6 +22,8 @@ from typing import List, Optional
 import numpy as np
 
 from ..core.codecs import get_codec
+from .scan import DecodedListCache
+from .stats import SearchStats
 
 __all__ = ["knn_graph", "build_nsg", "build_hnsw", "GraphIndex"]
 
@@ -103,6 +105,7 @@ def build_hnsw(x: np.ndarray, m: int, seed: int = 0) -> List[np.ndarray]:
 @dataclasses.dataclass
 class GraphIndex:
     id_codec: str = "roc"
+    cache_bytes: Optional[int] = None    # DecodedListCache budget (None = default)
 
     def build(self, x: np.ndarray, adj: List[np.ndarray]) -> "GraphIndex":
         self.x = x.astype(np.float32)
@@ -114,6 +117,49 @@ class GraphIndex:
         # entry point: medoid
         mean = self.x.mean(0)
         self.entry = int(np.argmin(np.sum((self.x - mean) ** 2, axis=1)))
+        self._decoded_cache = self._new_cache()
+        return self
+
+    def _new_cache(self) -> DecodedListCache:
+        if self.cache_bytes is not None:
+            return DecodedListCache(max_bytes=self.cache_bytes)
+        return DecodedListCache()
+
+    @property
+    def decoded_cache(self) -> DecodedListCache:
+        # lazily attached so indexes built before this field existed still work
+        if not hasattr(self, "_decoded_cache"):
+            self._decoded_cache = self._new_cache()
+        return self._decoded_cache
+
+    def add(self, x_new: np.ndarray, r: int = 16) -> "GraphIndex":
+        """Incremental HNSW-style insertion of new vectors.
+
+        Each new node gets <= ``r`` out-edges via the same occlusion rule the
+        offline builders use (candidates = nearest existing nodes), plus
+        reverse edges on its neighbors up to the ``r`` cap.  Every friend
+        list is then re-encoded (the id universe grew, which changes every
+        blob's rate and decode) and the decoded-list cache is invalidated.
+        """
+        x_new = np.asarray(x_new, np.float32)
+        if x_new.ndim == 1:
+            x_new = x_new[None]
+        for row in x_new:
+            i = self.n
+            self.x = np.concatenate([self.x, row[None]], axis=0)
+            d = np.sum((self.x[:i] - row) ** 2, axis=1)
+            cand = np.argsort(d, kind="stable")[: max(2 * r, 16)]
+            kept = _occlusion_prune(self.x, cand, i, r)
+            self.n = i + 1
+            self.adj_raw.append(np.asarray(sorted(kept), np.int64))
+            for j in kept:
+                if len(self.adj_raw[j]) < r and i not in self.adj_raw[j]:
+                    self.adj_raw[j] = np.asarray(
+                        sorted(np.append(self.adj_raw[j], i)), np.int64)
+        # the universe grew: every blob's rate/decode depends on n, re-encode
+        self._blobs = [self._codec.encode(a, self.n) if len(a) else None
+                       for a in self.adj_raw]
+        self.decoded_cache.clear()
         return self
 
     def id_bits(self) -> int:
@@ -124,21 +170,33 @@ class GraphIndex:
         return self.id_bits() / max(1, edges)
 
     def _friends(self, i: int) -> np.ndarray:
-        if self._blobs[i] is None:
+        """Friend list of node ``i``, decoded through the LRU cache."""
+        blob = self._blobs[i]
+        if blob is None:
             return np.zeros(0, np.int64)
-        return np.asarray(self._codec.decode(self._blobs[i], self.n))
+        return self.decoded_cache.get(
+            i, lambda: np.asarray(self._codec.decode(blob, self.n)))
 
     def search(self, queries: np.ndarray, ef: int = 16, topk: int = 10):
-        """Best-first (beam ef) search decoding friend lists on the fly."""
+        """Best-first (beam ef) search decoding friend lists on the fly.
+
+        Returns ``(ids, dists, SearchStats)`` — the same shape as
+        ``IVFIndex.search`` so services and benchmarks aggregate uniformly
+        (``visited`` = nodes expanded, ``decodes`` = friend-list decode
+        events, ``ndis`` = distance evaluations).
+        """
         t0 = time.perf_counter()
         nq = queries.shape[0]
         ids = np.zeros((nq, topk), np.int64)
-        dists = np.zeros((nq, topk), np.float32)
+        dists = np.full((nq, topk), np.inf, np.float32)
         hops = 0
+        ndis = 0
+        decodes0 = self.decoded_cache.decodes
         for qi in range(nq):
             q = queries[qi]
             visited = {self.entry}
             d0 = float(np.sum((self.x[self.entry] - q) ** 2))
+            ndis += 1
             cand = [(d0, self.entry)]           # min-heap of frontier
             best = [(-d0, self.entry)]          # max-heap of results (size ef)
             while cand:
@@ -152,6 +210,7 @@ class GraphIndex:
                 if not new:
                     continue
                 dv = np.sum((self.x[new] - q) ** 2, axis=1)
+                ndis += len(new)
                 for v, dd in zip(new, dv):
                     dd = float(dd)
                     if len(best) < ef or dd < -best[0][0]:
@@ -163,5 +222,12 @@ class GraphIndex:
             for j, (dd, v) in enumerate(res):
                 ids[qi, j] = v
                 dists[qi, j] = dd
-        wall = time.perf_counter() - t0
-        return ids, dists, wall, hops
+        stats = SearchStats(
+            wall_s=time.perf_counter() - t0,
+            ndis=ndis,
+            id_resolve_s=0.0,
+            decodes=self.decoded_cache.decodes - decodes0,
+            engine="graph",
+            visited=hops,
+        )
+        return ids, dists, stats

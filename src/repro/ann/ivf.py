@@ -32,19 +32,9 @@ from .kmeans import assign, kmeans
 from .pq import ProductQuantizer
 from .scan import (DecodedListCache, batched_search, coarse_probes,
                    resolve_ids_batch, score_rows_flat, select_topk)
+from .stats import SearchStats
 
 __all__ = ["IVFIndex", "SearchStats"]
-
-
-@dataclasses.dataclass
-class SearchStats:
-    wall_s: float
-    ndis: int
-    id_resolve_s: float
-    decodes: int = 0           # id-list decode events this call (LRU misses)
-    distinct_probed: int = 0   # distinct clusters probed across the batch
-    batches: int = 0           # query blocks scanned (0 for search_ref)
-    engine: str = "ref"        # "pallas" | "xla" | "ref"
 
 
 @dataclasses.dataclass
@@ -53,6 +43,7 @@ class IVFIndex:
     id_codec: str = "roc"
     pq: Optional[ProductQuantizer] = None
     code_codec: Optional[str] = None     # None | "polya"
+    cache_bytes: Optional[int] = None    # DecodedListCache budget (None = default)
 
     def build(self, x: np.ndarray, seed: int = 0,
               centroids: Optional[np.ndarray] = None) -> "IVFIndex":
@@ -105,16 +96,79 @@ class IVFIndex:
             self._polya = pc
         else:
             self._code_blob = None
-        self._decoded_cache = DecodedListCache()
+        self._decoded_cache = self._new_cache()
         return self
+
+    def _new_cache(self) -> DecodedListCache:
+        if self.cache_bytes is not None:
+            return DecodedListCache(max_bytes=self.cache_bytes)
+        return DecodedListCache()
 
     @property
     def decoded_cache(self) -> DecodedListCache:
         # lazily attached so indexes built before this field existed
         # (e.g. unpickled) still work
         if not hasattr(self, "_decoded_cache"):
-            self._decoded_cache = DecodedListCache()
+            self._decoded_cache = self._new_cache()
         return self._decoded_cache
+
+    def add(self, x: np.ndarray) -> "IVFIndex":
+        """Append new vectors to a built index (ids ``n .. n+len(x)-1``).
+
+        New ids are larger than every existing id, so appending each one to
+        the tail of its cluster's list keeps storage order == sorted order
+        (the invariant ``resolve_ids`` relies on).  Touched clusters are
+        re-encoded; the wavelet tree / Pólya blob are rebuilt (they are
+        joint structures over all clusters).
+        """
+        x = np.asarray(x, np.float32)
+        if x.ndim == 1:
+            x = x[None]
+        m = x.shape[0]
+        if m == 0:
+            return self
+        assign_new = assign(x, self.centroids)
+        new_ids = np.arange(self.n, self.n + m, dtype=np.int64)
+        new_codes = self.pq.encode(x) if self.pq is not None else None
+        # regroup per-cluster storage with the new rows appended in id order
+        new_lists: List[np.ndarray] = []
+        vec_parts: List[np.ndarray] = []
+        for k in range(self.nlist):
+            sel = assign_new == k
+            new_lists.append(np.concatenate([self._lists[k], new_ids[sel]]))
+            lo, hi = self.offsets[k], self.offsets[k + 1]
+            if self.pq is not None:
+                vec_parts.append(self.codes[lo:hi])
+                if sel.any():
+                    vec_parts.append(new_codes[sel])
+            else:
+                vec_parts.append(self.vecs[lo:hi])
+                if sel.any():
+                    vec_parts.append(x[sel])
+        self._lists = new_lists
+        self.sizes = self.sizes + np.bincount(assign_new, minlength=self.nlist)
+        self.offsets = np.concatenate([[0], np.cumsum(self.sizes)]).astype(np.int64)
+        if self.pq is not None:
+            self.codes = np.concatenate(vec_parts, axis=0)
+        else:
+            self.vecs = np.concatenate(vec_parts, axis=0)
+        self.cluster_of = np.concatenate([self.cluster_of, assign_new])
+        self.n += m
+        # id structures: joint ones rebuild, per-cluster ones re-encode.
+        # The universe grew from n-m to n, so *every* stream blob must be
+        # re-encoded (codec rates and decode both depend on the universe).
+        if self._wt is not None:
+            self._wt = WaveletTree.build(self.cluster_of, self.nlist,
+                                         compressed=(self.id_codec == "wt1"))
+        else:
+            self._blobs = [self._codec.encode(lst, self.n)
+                           for lst in self._lists]
+        if self._code_blob is not None:
+            per_cluster = [self.codes[self.offsets[k]: self.offsets[k + 1]]
+                           for k in range(self.nlist)]
+            self._code_blob = self._polya.encode(per_cluster)
+        self.decoded_cache.clear()
+        return self
 
     # -- sizes -------------------------------------------------------------------
     def id_bits(self) -> int:

@@ -124,6 +124,14 @@ class DecodedListCache:
         self._lists.clear()
         self.bytes = 0
 
+    def set_budget(self, max_bytes: int) -> None:
+        """Change the byte budget, evicting LRU entries down to it."""
+        self.max_bytes = int(max_bytes)
+        while self.bytes > self.max_bytes and len(self._lists) > 1:
+            _, old = self._lists.popitem(last=False)
+            self.bytes -= old.nbytes
+            self.evictions += 1
+
     def stats(self) -> Dict[str, int]:
         return {
             "entries": len(self._lists),
@@ -273,8 +281,8 @@ def batched_search(index, queries: np.ndarray, nprobe: int = 16,
 
     Returns ``(ids (nq, topk) int64, dists (nq, topk) f32, SearchStats)``.
     """
-    from .ivf import SearchStats  # deferred: ivf imports this module
     from .pq import ProductQuantizer
+    from .stats import SearchStats
 
     jnp = _jax().numpy
     engine = _resolve_engine(engine)

@@ -1,0 +1,26 @@
+"""Per-call search statistics, shared by every index type.
+
+One stats shape for the whole index layer (IVF scan, graph best-first,
+flat brute force) so ``repro.serve.AnnService`` and the benchmarks can
+aggregate decode/latency counters without caring which structure served
+the batch.  Fields that do not apply to a given index type stay at their
+zero default (e.g. ``visited`` for IVF, ``batches`` for graphs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["SearchStats"]
+
+
+@dataclasses.dataclass
+class SearchStats:
+    wall_s: float
+    ndis: int                  # distance evaluations this call
+    id_resolve_s: float        # late id-resolution time (IVF §4.1; 0 for graphs)
+    decodes: int = 0           # id-list decode events this call (LRU misses)
+    distinct_probed: int = 0   # distinct clusters probed across the batch (IVF)
+    batches: int = 0           # query blocks scanned (0 for search_ref/graphs)
+    engine: str = "ref"        # "pallas" | "xla" | "ref" | "graph" | "flat"
+    visited: int = 0           # graph nodes expanded (0 for IVF/flat)

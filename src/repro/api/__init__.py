@@ -1,0 +1,37 @@
+"""repro.api — the unified index layer.
+
+One :class:`Index` protocol, faiss-style factory strings, and lossless
+save/load for every index type::
+
+    from repro.api import index_factory, save_index, load_index
+
+    idx = index_factory("IVF1024,PQ8x8,ids=roc,codes=polya").build(x)
+    dists, ids, stats = idx.search(queries, k=10)
+    blob = save_index(idx)                 # RIDX v2 container
+    idx2 = load_index(blob)                # bit-identical search results
+
+Spec grammar: see :mod:`repro.api.spec` (and ROADMAP.md).  Everything a
+consumer needs — building, serving (``repro.serve.AnnService``), sizing
+(``memory_ledger``), persistence — goes through this seam.
+"""
+
+from .container import (load_index, pack_index, save_index, unpack_index)
+from .indexes import (FlatIndex, GraphApiIndex, IVFApiIndex, as_api_index,
+                      make_index)
+from .protocol import Index
+from .spec import IndexSpec, parse_spec
+
+__all__ = [
+    "Index", "IndexSpec", "parse_spec", "index_factory", "as_api_index",
+    "FlatIndex", "IVFApiIndex", "GraphApiIndex",
+    "pack_index", "unpack_index", "save_index", "load_index",
+]
+
+
+def index_factory(spec) -> Index:
+    """Factory-string (or :class:`IndexSpec`) -> empty index; ``.build(x)`` it.
+
+    >>> index_factory("IVF64,ids=roc").spec
+    'IVF64,ids=roc'
+    """
+    return make_index(spec)

@@ -1,0 +1,259 @@
+"""Concrete :class:`repro.api.Index` implementations.
+
+Thin adapters presenting the repo's index structures through the one
+protocol (faiss ``(dists, ids)`` order, uniform :class:`SearchStats`,
+uniform memory ledger):
+
+* :class:`FlatIndex`   — exact brute-force baseline (no compression).
+* :class:`IVFApiIndex` — wraps :class:`repro.ann.ivf.IVFIndex` (all id
+  codecs + wavelet tree, optional PQ / Pólya codes).
+* :class:`GraphApiIndex` — wraps :class:`repro.ann.graph.GraphIndex`
+  with the NSG/HNSW builders (per-list id codec choice).
+
+``as_api_index`` upgrades a raw ``IVFIndex``/``GraphIndex`` so existing
+call sites (e.g. ``AnnService(IVFIndex(...).build(x))``) keep working.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..ann.graph import GraphIndex, build_hnsw, build_nsg
+from ..ann.ivf import IVFIndex
+from ..ann.pq import ProductQuantizer
+from ..ann.scan import score_rows_flat, select_topk
+from ..ann.stats import SearchStats
+from .spec import IndexSpec, parse_spec
+
+__all__ = ["FlatIndex", "IVFApiIndex", "GraphApiIndex", "as_api_index"]
+
+
+def _cache_bytes(spec: IndexSpec) -> Optional[int]:
+    if spec.cache_mb is None:
+        return None
+    return int(spec.cache_mb * (1 << 20))
+
+
+class _SpecMixin:
+    index_spec: IndexSpec
+
+    @property
+    def spec(self) -> str:
+        """Canonical factory string (``index_factory(idx.spec)`` rebuilds)."""
+        return str(self.index_spec)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        n = getattr(self, "n", None)
+        return f"{type(self).__name__}(spec={self.spec!r}, n={n})"
+
+
+class FlatIndex(_SpecMixin):
+    """Exact brute-force search over raw f32 vectors (the recall oracle)."""
+
+    def __init__(self, spec: Optional[IndexSpec] = None):
+        self.index_spec = spec or IndexSpec(kind="flat")
+
+    def build(self, x: np.ndarray, seed: int = 0) -> "FlatIndex":
+        del seed  # no trained state; accepted for protocol uniformity
+        self.vecs = np.asarray(x, np.float32)
+        self.n, self.d = self.vecs.shape
+        return self
+
+    def add(self, x: np.ndarray) -> "FlatIndex":
+        x = np.asarray(x, np.float32)
+        if x.ndim == 1:
+            x = x[None]
+        self.vecs = np.concatenate([self.vecs, x], axis=0)
+        self.n = self.vecs.shape[0]
+        return self
+
+    def search(self, queries: np.ndarray, k: int = 10, **opts):
+        if opts:
+            raise TypeError(f"FlatIndex.search got unknown options {sorted(opts)}")
+        t0 = time.perf_counter()
+        queries = np.asarray(queries, np.float32)
+        nq = queries.shape[0]
+        k_eff = min(k, self.n)
+        ids = np.zeros((nq, k), np.int64)
+        dists = np.full((nq, k), np.inf, np.float32)
+        # scalar numpy scoring per query: deterministic, stable ties — the
+        # same path the IVF oracle uses, so results are reproducible bit-wise
+        for qi in range(nq):
+            d = score_rows_flat(self.vecs, queries[qi])
+            sel = select_topk(d, k_eff)
+            ids[qi, :k_eff] = sel
+            dists[qi, :k_eff] = d[sel]
+        stats = SearchStats(wall_s=time.perf_counter() - t0,
+                            ndis=self.n * nq, id_resolve_s=0.0, engine="flat")
+        return dists, ids, stats
+
+    def memory_ledger(self) -> Dict[str, float]:
+        return {
+            "n": self.n,
+            "ids_bytes": 0.0,
+            "ids_bytes_unc64": 0.0,
+            "ids_bytes_compact": 0.0,
+            "payload_bytes": float(self.vecs.nbytes),
+            "payload_bytes_unc": float(self.vecs.nbytes),
+            "centroid_bytes": 0.0,
+            "decoded_cache_bytes": 0.0,
+            "total_bytes": float(self.vecs.nbytes),
+        }
+
+
+class IVFApiIndex(_SpecMixin):
+    """Protocol adapter over the batched compressed-IVF index."""
+
+    def __init__(self, spec: IndexSpec):
+        self.index_spec = spec
+        pq = (ProductQuantizer(m=spec.pq_m, bits=spec.pq_bits)
+              if spec.pq_m else None)
+        self.ivf = IVFIndex(nlist=spec.nlist, id_codec=spec.ids, pq=pq,
+                            code_codec=spec.codes,
+                            cache_bytes=_cache_bytes(spec))
+
+    @classmethod
+    def from_built(cls, ivf: IVFIndex,
+                   spec: Optional[IndexSpec] = None) -> "IVFApiIndex":
+        self = cls.__new__(cls)
+        self.index_spec = spec or IndexSpec(
+            kind="ivf", nlist=ivf.nlist, ids=ivf.id_codec,
+            pq_m=ivf.pq.m if ivf.pq else 0, codes=ivf.code_codec,
+            cache_mb=(ivf.cache_bytes / (1 << 20)
+                      if getattr(ivf, "cache_bytes", None) else None))
+        self.ivf = ivf
+        return self
+
+    @property
+    def n(self) -> int:
+        return self.ivf.n
+
+    def build(self, x: np.ndarray, seed: int = 0,
+              centroids: Optional[np.ndarray] = None) -> "IVFApiIndex":
+        self.ivf.build(np.asarray(x, np.float32), seed=seed,
+                       centroids=centroids)
+        return self
+
+    def add(self, x: np.ndarray) -> "IVFApiIndex":
+        self.ivf.add(x)
+        return self
+
+    def search(self, queries: np.ndarray, k: int = 10, nprobe: int = 16,
+               engine: Optional[str] = None, query_block: int = 64):
+        ids, dists, stats = self.ivf.search(
+            np.asarray(queries, np.float32), nprobe=nprobe, topk=k,
+            engine=engine or self.index_spec.engine or "auto",
+            query_block=query_block)
+        return dists, ids, stats
+
+    def memory_ledger(self) -> Dict[str, float]:
+        idx = self.ivf
+        n = idx.n
+        id_bytes = idx.id_bits() / 8.0
+        if idx.codes is not None:
+            payload = idx.codes.shape[1] * n * idx.code_bits_per_element() / 8.0
+            payload_unc = idx.codes.nbytes
+        else:
+            payload = payload_unc = idx.vecs.nbytes
+        cache = idx.decoded_cache.stats()
+        return {
+            "n": n,
+            "ids_bytes": id_bytes,
+            "ids_bytes_unc64": 8.0 * n,
+            "ids_bytes_compact": float(np.ceil(np.log2(max(2, n)))) * n / 8.0,
+            "payload_bytes": payload,
+            "payload_bytes_unc": payload_unc,
+            "centroid_bytes": idx.centroids.nbytes,
+            "decoded_cache_bytes": cache["bytes"],
+            "total_bytes": id_bytes + payload + idx.centroids.nbytes
+            + cache["bytes"],
+        }
+
+
+class GraphApiIndex(_SpecMixin):
+    """Protocol adapter over the NSG/HNSW graph index."""
+
+    def __init__(self, spec: IndexSpec):
+        self.index_spec = spec
+        self.graph = GraphIndex(id_codec=spec.ids,
+                                cache_bytes=_cache_bytes(spec))
+
+    @classmethod
+    def from_built(cls, graph: GraphIndex,
+                   spec: Optional[IndexSpec] = None) -> "GraphApiIndex":
+        self = cls.__new__(cls)
+        # a raw GraphIndex doesn't know its builder; default the spec to NSG
+        # with the observed degree cap (callers with the truth pass `spec`)
+        self.index_spec = spec or IndexSpec(
+            kind="nsg", degree=max((len(a) for a in graph.adj_raw), default=1),
+            ids=graph.id_codec)
+        self.graph = graph
+        return self
+
+    @property
+    def n(self) -> int:
+        return self.graph.n
+
+    def build(self, x: np.ndarray, seed: int = 0,
+              adj: Optional[List[np.ndarray]] = None) -> "GraphApiIndex":
+        x = np.asarray(x, np.float32)
+        if adj is None:
+            builder = build_nsg if self.index_spec.kind == "nsg" else build_hnsw
+            adj = builder(x, self.index_spec.degree, seed=seed)
+        self.graph.build(x, adj)
+        return self
+
+    def add(self, x: np.ndarray) -> "GraphApiIndex":
+        self.graph.add(x, r=self.index_spec.degree)
+        return self
+
+    def search(self, queries: np.ndarray, k: int = 10,
+               ef: Optional[int] = None):
+        ids, dists, stats = self.graph.search(
+            np.asarray(queries, np.float32),
+            ef=ef if ef is not None else max(16, 2 * k), topk=k)
+        return dists, ids, stats
+
+    def memory_ledger(self) -> Dict[str, float]:
+        g = self.graph
+        edges = sum(len(a) for a in g.adj_raw)
+        id_bytes = g.id_bits() / 8.0
+        cache = g.decoded_cache.stats()
+        return {
+            "n": g.n,
+            "edges": edges,
+            "ids_bytes": id_bytes,
+            "ids_bytes_unc64": 8.0 * edges,
+            "ids_bytes_compact": float(np.ceil(np.log2(max(2, g.n)))) * edges / 8.0,
+            "payload_bytes": float(g.x.nbytes),
+            "payload_bytes_unc": float(g.x.nbytes),
+            "centroid_bytes": 0.0,
+            "decoded_cache_bytes": cache["bytes"],
+            "total_bytes": id_bytes + g.x.nbytes + cache["bytes"],
+        }
+
+
+def as_api_index(index):
+    """Upgrade a raw IVFIndex/GraphIndex to the protocol (identity otherwise)."""
+    if isinstance(index, (FlatIndex, IVFApiIndex, GraphApiIndex)):
+        return index
+    if isinstance(index, IVFIndex):
+        return IVFApiIndex.from_built(index)
+    if isinstance(index, GraphIndex):
+        return GraphApiIndex.from_built(index)
+    if hasattr(index, "spec") and hasattr(index, "memory_ledger"):
+        return index  # already protocol-shaped (duck-typed)
+    raise TypeError(f"cannot adapt {type(index).__name__} to repro.api.Index")
+
+
+def make_index(spec) -> "FlatIndex | IVFApiIndex | GraphApiIndex":
+    """Spec (string or IndexSpec) -> empty index of the right class."""
+    spec = parse_spec(spec)
+    if spec.kind == "flat":
+        return FlatIndex(spec)
+    if spec.kind == "ivf":
+        return IVFApiIndex(spec)
+    return GraphApiIndex(spec)

@@ -1,11 +1,14 @@
-"""RetrievalIndex — the paper's technique as a first-class framework feature.
+"""RetrievalIndex — embedder + factory spec, the paper's technique as a
+first-class framework feature.
 
-Ties the LM side to the ANN side: embeddings from any supported arch (mean-
-pooled hidden states) are indexed in an IVF structure whose inverted-list
-ids (and optionally PQ codes) are stored losslessly compressed.  Serving
-uses the §4.1 late-resolution trick, so the compressed ids cost O(topk)
-decode work per query.  This is the component a kNN-LM / RAG deployment
-would mount next to the model server.
+Ties the LM side to the ANN side: embeddings from any supported arch
+(mean-pooled hidden states) are indexed by **any** ``repro.api`` factory
+spec — IVF with compressed ids (and optionally PQ codes), NSG/HNSW with
+compressed friend lists, or a flat oracle.  Serving uses the §4.1
+late-resolution trick, so the compressed ids cost O(topk) decode work
+per query.  This is the component a kNN-LM / RAG deployment would mount
+next to the model server; ``save``/``load`` persist it as one RIDX v2
+artifact (the index-as-first-class-unit storage model).
 """
 
 from __future__ import annotations
@@ -17,8 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..ann.ivf import IVFIndex
-from ..ann.pq import ProductQuantizer
+from ..api import index_factory, load_index, save_index
+from ..api.spec import IndexSpec
 from ..configs.base import ModelConfig
 from ..models import build
 
@@ -47,32 +50,71 @@ def embed_corpus(cfg: ModelConfig, params, token_batches) -> np.ndarray:
 
 @dataclasses.dataclass
 class RetrievalIndex:
+    """Thin composition: a factory ``spec`` string over corpus embeddings.
+
+    The legacy constructor knobs (``nlist``/``id_codec``/``pq_m``/
+    ``code_codec``) are kept and synthesize a spec when ``spec`` is not
+    given explicitly.
+    """
+
     nlist: int = 64
     id_codec: str = "roc"
     pq_m: int = 0
     code_codec: Optional[str] = None
+    spec: Optional[str] = None
+
+    def __post_init__(self) -> None:
+        if self.spec is None:
+            self.spec = str(IndexSpec(
+                kind="ivf", nlist=self.nlist, ids=self.id_codec,
+                pq_m=self.pq_m, codes=self.code_codec))
 
     def build(self, embeddings: np.ndarray) -> "RetrievalIndex":
-        pq = ProductQuantizer(m=self.pq_m, bits=8) if self.pq_m else None
-        self.ivf = IVFIndex(nlist=self.nlist, id_codec=self.id_codec,
-                            pq=pq, code_codec=self.code_codec).build(embeddings)
+        self.index = index_factory(self.spec).build(embeddings)
         return self
 
-    def search(self, queries: np.ndarray, nprobe: int = 8, topk: int = 10,
-               engine: str = "auto"):
-        return self.ivf.search(queries, nprobe=nprobe, topk=topk,
-                               engine=engine)
+    @property
+    def ivf(self):
+        """The underlying IVFIndex (legacy accessor; IVF specs only)."""
+        return self.index.ivf
+
+    def search(self, queries: np.ndarray, topk: int = 10, **opts):
+        """Returns ``(ids, dists, stats)`` (legacy I/D order kept)."""
+        dists, ids, stats = self.index.search(queries, k=topk, **opts)
+        return ids, dists, stats
 
     def search_ref(self, queries: np.ndarray, nprobe: int = 8,
                    topk: int = 10):
-        """Per-query oracle scan (see IVFIndex.search_ref)."""
-        return self.ivf.search_ref(queries, nprobe=nprobe, topk=topk)
+        """Per-query oracle scan (see IVFIndex.search_ref; IVF specs only)."""
+        return self.index.ivf.search_ref(queries, nprobe=nprobe, topk=topk)
 
     def stats(self) -> dict:
-        return {
-            "n": self.ivf.n,
-            "bits_per_id": self.ivf.bits_per_id(),
-            "compact_bits": float(np.ceil(np.log2(self.ivf.n))),
-            "code_bits_per_element": self.ivf.code_bits_per_element(),
-            "decoded_cache": self.ivf.decoded_cache.stats(),
+        led = self.index.memory_ledger()
+        n = led["n"]
+        out = {
+            "n": n,
+            "spec": self.index.spec,
+            "compact_bits": float(np.ceil(np.log2(max(2, n)))),
+            "memory_ledger": led,
         }
+        inner = getattr(self.index, "ivf", None)
+        if inner is not None:
+            out["bits_per_id"] = inner.bits_per_id()
+            out["code_bits_per_element"] = inner.code_bits_per_element()
+            out["decoded_cache"] = inner.decoded_cache.stats()
+        graph = getattr(self.index, "graph", None)
+        if graph is not None:
+            out["bits_per_edge"] = graph.bits_per_edge()
+            out["decoded_cache"] = graph.decoded_cache.stats()
+        return out
+
+    # -- persistence (RIDX v2) ------------------------------------------------
+    def save(self, path=None) -> bytes:
+        return save_index(self.index, path)
+
+    @classmethod
+    def load(cls, src) -> "RetrievalIndex":
+        index = load_index(src)
+        ri = cls(spec=index.spec)
+        ri.index = index
+        return ri

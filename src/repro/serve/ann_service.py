@@ -1,10 +1,17 @@
-"""AnnService — request micro-batching over the batched compressed-IVF scan.
+"""AnnService — request micro-batching over any ``repro.api`` index.
 
-The serving deployment the paper motivates: a RAM-resident IVF index with
+The serving deployment the paper motivates: a RAM-resident ANN index with
 losslessly-compressed ids answers nearest-neighbor requests from many
-clients.  Individual requests are small (often one query); the batched
-engine (repro.ann.scan) only pays off when whole query blocks hit the
-kernels together.  This service closes that gap with a max-batch/max-wait
+clients.  The service holds any :class:`repro.api.Index` — factory-built
+IVF, NSG/HNSW graph or flat — through the one protocol (raw
+``IVFIndex``/``GraphIndex`` instances are auto-wrapped), so graph and IVF
+requests flow through the same code path.  Per-structure search knobs
+(``nprobe``/``engine`` for IVF, ``ef`` for graphs) ride in as keyword
+options; ``cache_mb`` overrides the index's decoded-list cache budget.
+
+Individual requests are small (often one query); the batched IVF engine
+(repro.ann.scan) only pays off when whole query blocks hit the kernels
+together.  This service closes that gap with a max-batch/max-wait
 micro-batching policy:
 
 * ``submit(queries)`` enqueues a request and returns a :class:`Ticket`.
@@ -64,21 +71,34 @@ class Ticket:
 
 
 class AnnService:
-    """Micro-batching front-end over ``IVFIndex.search``.
+    """Micro-batching front-end over any ``repro.api.Index``.
 
-    ``clock`` is injectable (defaults to ``time.perf_counter``) so the
-    max-wait policy is testable without sleeping.
+    ``**search_opts`` are forwarded to every ``index.search`` call
+    (IVF: ``nprobe``/``engine``/``query_block``; graph: ``ef``), so one
+    service class serves every index type.  ``clock`` is injectable
+    (defaults to ``time.perf_counter``) so the max-wait policy is
+    testable without sleeping.
     """
 
-    def __init__(self, index, nprobe: int = 16, topk: int = 10,
-                 policy: Optional[BatchPolicy] = None, engine: str = "auto",
-                 clock: Callable[[], float] = time.perf_counter):
-        self.index = index
-        self.nprobe = nprobe
+    def __init__(self, index, topk: int = 10,
+                 policy: Optional[BatchPolicy] = None,
+                 clock: Callable[[], float] = time.perf_counter,
+                 cache_mb: Optional[float] = None, **search_opts):
+        from ..api.indexes import as_api_index
+
+        self.index = as_api_index(index)
         self.topk = topk
         self.policy = policy or BatchPolicy()
-        self.engine = engine
+        self.search_opts = search_opts
         self.clock = clock
+        if cache_mb is not None:
+            inner = getattr(self.index, "ivf", None) or getattr(
+                self.index, "graph", None)
+            if inner is None:
+                raise ValueError(
+                    f"index {self.index.spec!r} has no decoded-list cache "
+                    "to budget")
+            inner.decoded_cache.set_budget(int(cache_mb * (1 << 20)))
         self._pending: List[Ticket] = []
         self._pending_q: List[np.ndarray] = []
         self._next_id = 0
@@ -133,8 +153,8 @@ class AnnService:
         qs, self._pending_q = self._pending_q, []
         now = self.clock()
         batch = np.concatenate(qs, axis=0)
-        ids, dists, st = self.index.search(
-            batch, nprobe=self.nprobe, topk=self.topk, engine=self.engine)
+        dists, ids, st = self.index.search(batch, k=self.topk,
+                                           **self.search_opts)
         self.batches += 1
         self.ndis += st.ndis
         self.decodes += st.decodes
@@ -188,25 +208,6 @@ class AnnService:
         }
 
     def memory_ledger(self) -> Dict[str, float]:
-        """Bytes by component, plus the uncompressed/compact baselines."""
-        idx = self.index
-        n = idx.n
-        id_bytes = idx.id_bits() / 8.0
-        if idx.codes is not None:
-            payload = idx.codes.shape[1] * n * idx.code_bits_per_element() / 8.0
-            payload_unc = idx.codes.nbytes
-        else:
-            payload = payload_unc = idx.vecs.nbytes
-        cache = idx.decoded_cache.stats()
-        return {
-            "n": n,
-            "ids_bytes": id_bytes,
-            "ids_bytes_unc64": 8.0 * n,
-            "ids_bytes_compact": float(np.ceil(np.log2(max(2, n)))) * n / 8.0,
-            "payload_bytes": payload,
-            "payload_bytes_unc": payload_unc,
-            "centroid_bytes": idx.centroids.nbytes,
-            "decoded_cache_bytes": cache["bytes"],
-            "total_bytes": id_bytes + payload + idx.centroids.nbytes
-            + cache["bytes"],
-        }
+        """Bytes by component, plus the uncompressed/compact baselines
+        (delegated to the index — uniform across index types)."""
+        return self.index.memory_ledger()

@@ -112,10 +112,15 @@ def test_graph_search_recall(small_data, builder):
     base, queries = base[:2000], queries[:30]
     adj = builder(base, 16)
     gi = GraphIndex(id_codec="roc").build(base, adj)
-    ids, _, _, _ = gi.search(queries, ef=32, topk=5)
+    ids, _, st = gi.search(queries, ef=32, topk=5)
     gt = _exact_topk(base, queries, 1)
     recall = np.mean([gt[i, 0] in ids[i] for i in range(len(queries))])
     assert recall > 0.7
+    # uniform stats shape (satellite of the api redesign): graph searches
+    # report visited/decode counters like the IVF engine does
+    assert st.engine == "graph"
+    assert st.visited > 0 and st.ndis > 0 and st.wall_s > 0
+    assert 0 < st.decodes <= st.visited
 
 
 def test_graph_codecs_identical_results(small_data):
@@ -123,8 +128,8 @@ def test_graph_codecs_identical_results(small_data):
     base, queries = base[:1000], queries[:10]
     adj = build_nsg(base, 12)
     ref = GraphIndex(id_codec="unc32").build(base, adj)
-    ids_ref, _, _, _ = ref.search(queries, ef=16, topk=5)
+    ids_ref, _, _ = ref.search(queries, ef=16, topk=5)
     for codec in ["roc", "ef", "gap_ans"]:
         gi = GraphIndex(id_codec=codec).build(base, adj)
-        ids, _, _, _ = gi.search(queries, ef=16, topk=5)
+        ids, _, _ = gi.search(queries, ef=16, topk=5)
         np.testing.assert_array_equal(ids, ids_ref)

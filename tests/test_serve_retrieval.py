@@ -48,6 +48,25 @@ def test_retrieval_index_with_pq_codes():
     assert ids.shape == (8, 3)
 
 
+def test_retrieval_index_is_spec_thin():
+    """RetrievalIndex is now a thin composition over the api factory:
+    any spec serves, and the whole thing persists as one RIDX artifact."""
+    base, queries = make_dataset("deep-like", 3_000, 16, seed=0)
+    ri = RetrievalIndex(spec="IVF32,PQ8x8,ids=roc,codes=polya").build(base)
+    assert ri.index.spec == "IVF32,PQ8x8,ids=roc,codes=polya"
+    ids0, d0, _ = ri.search(queries, topk=5, nprobe=8)
+    blob = ri.save()
+    ri2 = RetrievalIndex.load(blob)
+    ids1, d1, _ = ri2.search(queries, topk=5, nprobe=8)
+    np.testing.assert_array_equal(ids0, ids1)
+    np.testing.assert_array_equal(d0, d1)
+    # graph spec through the same front door
+    rg = RetrievalIndex(spec="NSG8,ids=ef").build(base[:400])
+    gids, _, gst = rg.search(queries, topk=5, ef=16)
+    assert gids.shape == (16, 5) and gst.visited > 0
+    assert rg.stats()["bits_per_edge"] > 0
+
+
 def test_ivf_container_roundtrip():
     """Offline whole-index blob (paper §4.3) round-trips and shrinks."""
     from repro.ann.ivf import IVFIndex
@@ -74,6 +93,8 @@ def test_public_import_surface():
     """The documented package entry points all import."""
     import repro.core as core
     import repro.serve as serve
+    from repro.api import (Index, index_factory, load_index,  # noqa: F401
+                           parse_spec, save_index)
     from repro.core import CODEC_NAMES, get_codec
     from repro.distributed.sp import sp_decode_attention  # noqa: F401
     from repro.serve import make_prefill_step, make_serve_step  # noqa: F401
