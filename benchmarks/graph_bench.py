@@ -1,0 +1,86 @@
+"""Batched graph-search engine vs the per-query reference loop.
+
+Times ``NSG32,ids=roc`` (the paper's Table 2 graph operating point) at
+batch sizes >= 32: the beam-batched engine (repro.ann.graph_scan) against
+``search_ref``, interleaved min-of-k so the two paths see the same
+machine noise.  Also checks the decode-sharing claim: the batched
+engine's decode count must not exceed the number of *distinct* friend
+lists expanded per step (``visited - dedup_hits``).
+
+Emits ``graph/<case>`` CSV lines and experiments/results/graph_bench.json.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import Timer, emit, save_result
+
+SPEC = "NSG32,ids=roc"
+
+
+def _qps(fn, nq: int, repeats: int) -> float:
+    best = np.inf
+    for _ in range(repeats):
+        with Timer() as t:
+            fn()
+        best = min(best, t.s)
+    return nq / best
+
+
+def main(quick: bool = False) -> None:
+    from repro.api import index_factory
+    from repro.data.synthetic import make_dataset
+
+    n = 4000 if quick else 20000
+    repeats = 3 if quick else 15
+    ef = 32
+    base, queries = make_dataset("deep-like", n, 128, seed=0)
+    idx = index_factory(SPEC).build(base, seed=1)
+    g = idx.graph
+
+    rows = []
+    for batch in (32, 64, 128):
+        q = queries[:batch]
+        # warm both paths off-clock (jit compiles, decode cache parity)
+        g.search(q, ef=ef, topk=10)
+        g.search_ref(q, ef=ef, topk=10)
+        # interleave so drift hits ref and batched alike
+        best_ref = best_bat = np.inf
+        for _ in range(repeats):
+            with Timer() as t:
+                g.search_ref(q, ef=ef, topk=10)
+            best_ref = min(best_ref, t.s)
+            with Timer() as t:
+                g.search(q, ef=ef, topk=10)
+            best_bat = min(best_bat, t.s)
+        qps_ref = batch / best_ref
+        qps_bat = batch / best_bat
+
+        g.decoded_cache.clear()          # make the decode delta observable
+        ids_b, d_b, st = g.search(q, ef=ef, topk=10)
+        ids_r, d_r, _ = g.search_ref(q, ef=ef, topk=10)
+        exact = bool(np.array_equal(ids_b, ids_r) and np.array_equal(d_b, d_r))
+        distinct_lists = st.visited - st.dedup_hits
+        dedup_ok = bool(0 < st.decodes <= distinct_lists)
+
+        case = f"{SPEC}/batch{batch}/ef{ef}"
+        emit(f"graph/{case}", 1e6 / qps_bat,
+             f"qps={qps_bat:.0f} ref_qps={qps_ref:.0f} "
+             f"speedup={qps_bat / qps_ref:.2f}x exact={exact} "
+             f"decodes={st.decodes}<=lists={distinct_lists}:{dedup_ok}")
+        rows.append({
+            "spec": SPEC, "batch": batch, "ef": ef, "n": n,
+            "qps_batched": qps_bat, "qps_ref": qps_ref,
+            "speedup": qps_bat / qps_ref, "exact": exact,
+            "steps": st.steps, "frontier_size": st.frontier_size,
+            "decodes": st.decodes, "dedup_hits": st.dedup_hits,
+            "visited": st.visited, "distinct_lists": distinct_lists,
+            "dedup_ok": dedup_ok,
+        })
+
+    save_result("graph_bench", {"spec": SPEC, "quick": quick, "rows": rows})
+
+
+if __name__ == "__main__":
+    main(quick=True)

@@ -15,16 +15,17 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset: table1 table2 table3 table4 fig3 moe codec "
-                         "roofline spec")
+                         "roofline graph spec")
     ap.add_argument("--spec", action="append", default=None,
                     help="factory spec string for the 'spec' suite "
                          "(repeatable); implies --only spec when --only is "
                          "not given")
     args = ap.parse_args()
 
-    from . import (codec_speed, fig3_code_compression, moe_routing, roofline,
-                   spec_bench, table1_bpe, table2_search_time,
-                   table3_offline_graph, table4_large_scale)
+    from . import (codec_speed, fig3_code_compression, graph_bench,
+                   moe_routing, roofline, spec_bench, table1_bpe,
+                   table2_search_time, table3_offline_graph,
+                   table4_large_scale)
 
     suites = {
         "table1": table1_bpe.main,
@@ -35,6 +36,7 @@ def main() -> None:
         "moe": moe_routing.main,
         "codec": codec_speed.main,
         "roofline": roofline.main,
+        "graph": graph_bench.main,
         "spec": lambda quick=False: spec_bench.main(quick=quick,
                                                     specs=args.spec),
     }

@@ -65,7 +65,7 @@ def main(argv=None):
     is_ivf = hasattr(idx, "ivf")
 
     if is_graph:
-        search_opts = {"ef": args.ef}
+        search_opts = {"ef": args.ef, "engine": args.engine}
     elif is_ivf:
         search_opts = {"nprobe": args.nprobe, "engine": args.engine}
     else:  # Flat takes no per-search knobs

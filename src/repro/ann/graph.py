@@ -8,8 +8,10 @@ Builders (faithful-in-statistics, DESIGN.md §9):
 
 Online setting: per-node friend-list streams through any id codec.
 Offline setting: the whole edge list through REC or webgraph-lite
-(benchmarks/table3).  Search: best-first with a visited set, decoding
-friend lists on the fly (this is what Table 2's NSG rows time).
+(benchmarks/table3).  Search: ``search`` is the beam-batched engine
+(repro.ann.graph_scan — lockstep frontier, shared decode, blocked
+kernel scoring); ``search_ref`` keeps the per-query best-first loop as
+the bit-exact oracle (what Table 2's NSG rows time).
 """
 
 from __future__ import annotations
@@ -177,9 +179,29 @@ class GraphIndex:
         return self.decoded_cache.get(
             i, lambda: np.asarray(self._codec.decode(blob, self.n)))
 
-    def search(self, queries: np.ndarray, ef: int = 16, topk: int = 10):
+    def search(self, queries: np.ndarray, ef: int = 16, topk: int = 10,
+               engine: str = "auto", query_block: int = 64,
+               kernel_min: int | None = None):
+        """Beam-batched search (repro.ann.graph_scan).
+
+        Advances all queries in lockstep: per-step deduped friend-list
+        gather through the shared decode cache, one blocked distance
+        computation per step (``engine`` picks the Pallas kernel or the
+        jitted XLA fallback; ``kernel_min`` gates the minimum tile that
+        takes it), exact beam admission.  Bit-identical to
+        :meth:`search_ref` — ids AND distances — for every codec/engine.
+        """
+        from .graph_scan import batched_graph_search
+
+        return batched_graph_search(self, queries, ef=ef, topk=topk,
+                                    engine=engine, query_block=query_block,
+                                    kernel_min=kernel_min)
+
+    def search_ref(self, queries: np.ndarray, ef: int = 16, topk: int = 10):
         """Best-first (beam ef) search decoding friend lists on the fly.
 
+        The original per-query Python loop, kept as the batched engine's
+        bit-exact oracle (same contract as ``IVFIndex.search_ref``).
         Returns ``(ids, dists, SearchStats)`` — the same shape as
         ``IVFIndex.search`` so services and benchmarks aggregate uniformly
         (``visited`` = nodes expanded, ``decodes`` = friend-list decode

@@ -47,6 +47,7 @@ __all__ = [
     "select_topk",
     "score_rows_flat",
     "resolve_ids_batch",
+    "rescore_eps",
     "DecodedListCache",
 ]
 
@@ -82,6 +83,21 @@ def score_rows_flat(rows: np.ndarray, q: np.ndarray) -> np.ndarray:
     """Squared L2 of each row to ``q`` — the oracle's scalar scoring path."""
     diff = rows - q[None]
     return np.einsum("nd,nd->n", diff, diff)
+
+
+def rescore_eps(d: int, bound: float, qn: float, factor: float = 16.0) -> float:
+    """Error band of the kernels' expanded ``qn - 2qc + cn`` f32 scoring.
+
+    The expanded form cancels catastrophically for near-duplicate vectors,
+    so kernel distances near a decision ``bound`` may be mis-ranked by up
+    to the cancellation error; exact decisions must re-score everything
+    within this band.  ``factor`` carries headroom over the d-term f32
+    contraction bound — too wide only re-scores a few extra rows, never
+    breaks parity.  Shared by the IVF shortlist extension and the graph
+    engine's beam-admission pruning so both use one audited bound.
+    """
+    scale = 1.0 + abs(float(bound)) + float(qn)
+    return factor * d * float(np.finfo(np.float32).eps) * scale
 
 
 # ---------------------------------------------------------------------------
@@ -400,10 +416,8 @@ def batched_search(index, queries: np.ndarray, nprobe: int = 16,
             # re-score below sees every potential top-k member.
             row = d_blk[i]
             bound = float(row[order[i, take - 1]])
-            scale = 1.0 + abs(bound) + (0.0 if use_pq else float(qn_host[i]))
-            # error bound of a d-term f32 contraction, with headroom; too
-            # wide only re-scores a few extra rows, never breaks parity
-            eps = 16.0 * index.d * np.finfo(np.float32).eps * scale
+            eps = rescore_eps(index.d, bound,
+                              0.0 if use_pq else float(qn_host[i]))
             while take < nvalid and row[order[i, take]] <= bound + eps:
                 take += 1
             # candidate *row positions* are the oracle's concat positions:

@@ -22,5 +22,8 @@ class SearchStats:
     decodes: int = 0           # id-list decode events this call (LRU misses)
     distinct_probed: int = 0   # distinct clusters probed across the batch (IVF)
     batches: int = 0           # query blocks scanned (0 for search_ref/graphs)
-    engine: str = "ref"        # "pallas" | "xla" | "ref" | "graph" | "flat"
+    engine: str = "ref"        # "pallas" | "xla" | "ref" | "graph*" | "flat"
     visited: int = 0           # graph nodes expanded (0 for IVF/flat)
+    steps: int = 0             # lockstep beam iterations (batched graph only)
+    frontier_size: int = 0     # sum of active beams over steps (graph batched)
+    dedup_hits: int = 0        # same-step friend-list fetches shared across beams

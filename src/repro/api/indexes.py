@@ -211,10 +211,13 @@ class GraphApiIndex(_SpecMixin):
         return self
 
     def search(self, queries: np.ndarray, k: int = 10,
-               ef: Optional[int] = None):
+               ef: Optional[int] = None, engine: Optional[str] = None,
+               query_block: int = 64):
         ids, dists, stats = self.graph.search(
             np.asarray(queries, np.float32),
-            ef=ef if ef is not None else max(16, 2 * k), topk=k)
+            ef=ef if ef is not None else max(16, 2 * k), topk=k,
+            engine=engine or self.index_spec.engine or "auto",
+            query_block=query_block)
         return dists, ids, stats
 
     def memory_ledger(self) -> Dict[str, float]:

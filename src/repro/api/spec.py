@@ -10,7 +10,7 @@ codec × structure matrix from a single ``--spec`` flag::
     keys   := ids      = unc64|unc32|compact|ef|roc|gap_ans|wt|wt1
               codes    = polya                # IVF+PQ only
               cache_mb = <float>              # DecodedListCache budget
-              engine   = auto|xla|pallas     # IVF scan backend
+              engine   = auto|xla|pallas     # scan backend (IVF + graph)
 
 ``ids=wt|wt1`` (the joint wavelet tree) applies only to IVF — friend
 lists are not a partition.  :func:`parse_spec` accepts options in any
@@ -48,7 +48,7 @@ class IndexSpec:
     ids: str = "roc"                  # id codec ("" for Flat)
     codes: Optional[str] = None       # None | "polya"
     cache_mb: Optional[float] = None  # DecodedListCache budget
-    engine: Optional[str] = None      # None = index default ("auto")
+    engine: Optional[str] = None      # scan backend, IVF + graph (None = "auto")
 
     def __post_init__(self) -> None:
         if self.kind not in ("flat", "ivf", "nsg", "hnsw"):

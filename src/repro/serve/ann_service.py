@@ -6,8 +6,9 @@ clients.  The service holds any :class:`repro.api.Index` — factory-built
 IVF, NSG/HNSW graph or flat — through the one protocol (raw
 ``IVFIndex``/``GraphIndex`` instances are auto-wrapped), so graph and IVF
 requests flow through the same code path.  Per-structure search knobs
-(``nprobe``/``engine`` for IVF, ``ef`` for graphs) ride in as keyword
-options; ``cache_mb`` overrides the index's decoded-list cache budget.
+(``nprobe`` for IVF, ``ef`` for graphs, ``engine`` for both — each runs
+a batched scan engine) ride in as keyword options; ``cache_mb``
+overrides the index's decoded-list cache budget.
 
 Individual requests are small (often one query); the batched IVF engine
 (repro.ann.scan) only pays off when whole query blocks hit the kernels
@@ -74,8 +75,9 @@ class AnnService:
     """Micro-batching front-end over any ``repro.api.Index``.
 
     ``**search_opts`` are forwarded to every ``index.search`` call
-    (IVF: ``nprobe``/``engine``/``query_block``; graph: ``ef``), so one
-    service class serves every index type.  ``clock`` is injectable
+    (IVF: ``nprobe``/``engine``/``query_block``; graph:
+    ``ef``/``engine``/``query_block``), so one service class serves
+    every index type.  ``clock`` is injectable
     (defaults to ``time.perf_counter``) so the max-wait policy is
     testable without sleeping.
     """

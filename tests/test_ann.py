@@ -117,10 +117,13 @@ def test_graph_search_recall(small_data, builder):
     recall = np.mean([gt[i, 0] in ids[i] for i in range(len(queries))])
     assert recall > 0.7
     # uniform stats shape (satellite of the api redesign): graph searches
-    # report visited/decode counters like the IVF engine does
-    assert st.engine == "graph"
+    # report visited/decode counters like the IVF engine does, plus the
+    # batched engine's step counters ("graph-xla" / "graph-pallas")
+    assert st.engine.startswith("graph-")
     assert st.visited > 0 and st.ndis > 0 and st.wall_s > 0
     assert 0 < st.decodes <= st.visited
+    assert st.steps > 0 and st.frontier_size >= st.steps
+    assert st.dedup_hits >= 0
 
 
 def test_graph_codecs_identical_results(small_data):
