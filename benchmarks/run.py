@@ -15,7 +15,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset: table1 table2 table3 table4 fig3 moe codec "
-                         "roofline graph spec")
+                         "roofline graph spec shard")
     ap.add_argument("--spec", action="append", default=None,
                     help="factory spec string for the 'spec' suite "
                          "(repeatable); implies --only spec when --only is "
@@ -23,8 +23,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (codec_speed, fig3_code_compression, graph_bench,
-                   moe_routing, roofline, spec_bench, table1_bpe,
-                   table2_search_time, table3_offline_graph,
+                   moe_routing, roofline, shard_bench, spec_bench,
+                   table1_bpe, table2_search_time, table3_offline_graph,
                    table4_large_scale)
 
     suites = {
@@ -37,6 +37,7 @@ def main() -> None:
         "codec": codec_speed.main,
         "roofline": roofline.main,
         "graph": graph_bench.main,
+        "shard": shard_bench.main,
         "spec": lambda quick=False: spec_bench.main(quick=quick,
                                                     specs=args.spec),
     }

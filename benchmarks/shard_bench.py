@@ -1,0 +1,72 @@
+"""Scatter/merge overhead: sharded vs monolithic serving QPS.
+
+The router's merge is bit-identical to the unsharded index, so the only
+question is cost: what does fanning a query batch out to N shard workers
+and k-way merging the answers cost versus one monolithic search?  On one
+machine (threads, shared memory bandwidth) sharding buys no capacity —
+the point of the number is the *overhead floor* of the scatter/merge
+path that a multi-machine deployment would amortize.
+
+Sweeps shards x batch size on one IVF spec; emits QPS for the monolithic
+service and each shard count, plus merge-time share.  JSON lands in
+experiments/results/shard_bench.json.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import Timer, emit, save_result
+
+
+def _qps(svc, queries, batch: int, repeats: int) -> float:
+    svc.search(queries[:batch])          # warm jit caches off the clock
+    svc.reset_stats()
+    with Timer() as t:
+        for _ in range(repeats):
+            for i in range(0, len(queries), batch):
+                svc.search(queries[i:i + batch])
+    return repeats * len(queries) / t.s
+
+
+def main(quick: bool = False) -> None:
+    from repro.api import index_factory
+    from repro.data.synthetic import make_dataset
+    from repro.serve import AnnService
+    from repro.shard import ShardedAnnService, plan_shards
+
+    n = 20_000 if quick else 200_000
+    nq = 256 if quick else 1024
+    repeats = 1 if quick else 3
+    spec = "IVF64,ids=roc" if quick else "IVF512,ids=roc"
+    nprobe = 8 if quick else 16
+
+    base, queries = make_dataset("sift-like", n, nq, seed=0)
+    mono = index_factory(spec).build(base, seed=1)
+
+    rows = []
+    for batch in (32, 128):
+        svc = AnnService(mono, topk=10, nprobe=nprobe)
+        mono_qps = _qps(svc, queries, batch, repeats)
+        emit(f"shard/mono_b{batch}", 1e6 / mono_qps, f"{mono_qps:.0f}qps")
+        rows.append({"shards": 0, "batch": batch, "qps": mono_qps,
+                     "merge_share": 0.0})
+        for nshards in (1, 2, 4):
+            plan = plan_shards(mono, nshards)
+            svc = ShardedAnnService(plan, topk=10, nprobe=nprobe)
+            qps = _qps(svc, queries, batch, repeats)
+            st = svc.stats()
+            svc.close()
+            merge_share = st["merge_s"] / max(st["search_s"], 1e-12)
+            emit(f"shard/s{nshards}_b{batch}", 1e6 / qps,
+                 f"{qps:.0f}qps;{qps / mono_qps:.2f}x;"
+                 f"merge={merge_share:.1%}")
+            rows.append({"shards": nshards, "batch": batch, "qps": qps,
+                         "vs_mono": qps / mono_qps,
+                         "merge_share": merge_share})
+    save_result("shard_bench", {"spec": spec, "n": n, "nprobe": nprobe,
+                                "rows": rows})
+
+
+if __name__ == "__main__":
+    main(quick=True)

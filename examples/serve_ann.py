@@ -11,6 +11,13 @@ ledger vs the uncompressed layout.
 
     PYTHONPATH=src python examples/serve_ann.py [--n 200000] [--queries 2000]
     PYTHONPATH=src python examples/serve_ann.py --spec "IVF512,ids=ef" --cache-mb 16
+
+With ``--shards N`` the built index is split by the shard planner and
+served through :class:`repro.shard.ShardedAnnService` (scatter/merge,
+bit-identical to the monolithic service when healthy); ``--fault-rate p``
+injects seeded random per-shard failures to demo degraded mode:
+
+    PYTHONPATH=src python examples/serve_ann.py --shards 4 --fault-rate 0.05
 """
 
 import argparse
@@ -52,7 +59,14 @@ def main(argv=None):
                     help="queries per client request")
     ap.add_argument("--engine", default="auto",
                     choices=["auto", "pallas", "xla"])
+    ap.add_argument("--shards", type=int, default=0,
+                    help="split the index and serve via ShardedAnnService")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="seeded random per-shard failure probability "
+                         "(needs --shards)")
     args = ap.parse_args(argv)
+    if args.fault_rate and not args.shards:
+        ap.error("--fault-rate needs --shards")
 
     print(f"dataset: {args.n} x 128 (sift-like)")
     base, queries = make_dataset("sift-like", args.n, args.queries, seed=0)
@@ -70,10 +84,22 @@ def main(argv=None):
         search_opts = {"nprobe": args.nprobe, "engine": args.engine}
     else:  # Flat takes no per-search knobs
         search_opts = {}
-    svc = AnnService(idx, topk=10, cache_mb=args.cache_mb,
-                     policy=BatchPolicy(max_batch=args.max_batch,
-                                        max_wait_s=0.002),
-                     **search_opts)
+    policy = BatchPolicy(max_batch=args.max_batch, max_wait_s=0.002)
+    if args.shards:
+        from repro.shard import (RandomFaults, ShardedAnnService,
+                                 plan_shards)
+        plan = plan_shards(idx, args.shards)
+        sizes = ", ".join(str(s.n_local) for s in plan.shards)
+        print(f"sharding: {args.shards} shards by {plan.by} "
+              f"({sizes} vectors)")
+        faults = (RandomFaults(args.fault_rate, seed=0)
+                  if args.fault_rate else None)
+        svc = ShardedAnnService(plan, topk=10, cache_mb=args.cache_mb,
+                                policy=policy, fault_policy=faults,
+                                **search_opts)
+    else:
+        svc = AnnService(idx, topk=10, cache_mb=args.cache_mb,
+                         policy=policy, **search_opts)
     # warm the jit caches off the clock (and keep it out of the stats)
     svc.search(queries[: args.max_batch])
     svc.reset_stats()
@@ -108,6 +134,14 @@ def main(argv=None):
     print(f"id resolve overhead:  {st['resolve_s']/len(queries)*1e6:.0f} us/query "
           f"(late resolution, O(topk)); {st['decodes']:.0f} list decodes "
           f"for {st['queries']:.0f} queries")
+    if args.shards:
+        print(f"sharded serving:      {st['shards']:.0f} shards, "
+              f"merge {st['merge_s']/max(st['search_s'],1e-12):.1%} of "
+              f"search wall, p95 latency {st['p95_latency_s']*1e3:.2f} ms")
+        print(f"degraded mode:        {st['partial_batches']:.0f}/"
+              f"{st['batches']:.0f} partial batches, "
+              f"{st['shards_failed']:.0f} shard failures, "
+              f"{st['retries']:.0f} retries")
     print(f"\nRAM ledger (ids + codes):")
     print(f"  uncompressed (64b ids):  "
           f"{(led['ids_bytes_unc64'] + led['payload_bytes_unc'])/1e6:8.1f} MB")

@@ -201,14 +201,18 @@ class IVFIndex:
 
     # -- search ---------------------------------------------------------------------
     def search(self, queries: np.ndarray, nprobe: int = 16, topk: int = 10,
-               engine: str = "auto", query_block: int = 64):
+               engine: str = "auto", query_block: int = 64,
+               with_keys: bool = False):
         """Batched search (repro.ann.scan). Returns (ids, dists, SearchStats).
 
         Bit-identical to :meth:`search_ref`; ``engine`` picks the scoring
         backend ("pallas" kernels, "xla", or "auto" = pallas off-CPU).
+        ``with_keys`` fills ``stats.merge_keys`` with the stable tie-order
+        keys the sharded router merges by (see ``batched_search``).
         """
         return batched_search(self, queries, nprobe=nprobe, topk=topk,
-                              engine=engine, query_block=query_block)
+                              engine=engine, query_block=query_block,
+                              with_keys=with_keys)
 
     def search_ref(self, queries: np.ndarray, nprobe: int = 16,
                    topk: int = 10):

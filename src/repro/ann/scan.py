@@ -43,6 +43,7 @@ import numpy as np
 
 __all__ = [
     "batched_search",
+    "MERGE_KEY_PAD",
     "coarse_probes",
     "select_topk",
     "score_rows_flat",
@@ -290,12 +291,26 @@ def _spans_concat(starts: np.ndarray, lens: np.ndarray) -> np.ndarray:
     return np.repeat(starts - cum, lens) + idx
 
 
+MERGE_KEY_PAD = np.uint64(np.iinfo(np.uint64).max)
+
+
 def batched_search(index, queries: np.ndarray, nprobe: int = 16,
                    topk: int = 10, engine: str = "auto",
-                   query_block: int = DEFAULT_QUERY_BLOCK):
+                   query_block: int = DEFAULT_QUERY_BLOCK,
+                   with_keys: bool = False):
     """Batched IVF search; bit-identical to ``index.search_ref``.
 
     Returns ``(ids (nq, topk) int64, dists (nq, topk) f32, SearchStats)``.
+
+    ``with_keys=True`` additionally fills ``stats.merge_keys`` with a
+    (nq, topk) uint64 array: each result's position in the monolithic
+    stable candidate order, ``(probe_rank << 40) | in-cluster offset``
+    (padding slots = ``MERGE_KEY_PAD``).  Candidates of one query are
+    concatenated probe-by-probe then offset-by-offset, so this key is
+    exactly the order ``select_topk`` breaks distance ties with — a
+    sharded router that merges per-shard results by ``(dist, key)``
+    reproduces the unsharded output bit-for-bit even under duplicate
+    vectors (repro.shard.service).
     """
     from .pq import ProductQuantizer
     from .stats import SearchStats
@@ -323,6 +338,9 @@ def batched_search(index, queries: np.ndarray, nprobe: int = 16,
     res_slot: List[np.ndarray] = []
     res_cluster: List[np.ndarray] = []
     res_offset: List[np.ndarray] = []
+    res_key: List[np.ndarray] = []
+    all_keys = (np.full((nq, topk), MERGE_KEY_PAD, np.uint64)
+                if with_keys else None)
 
     for q0 in range(0, nq, query_block):
         q1 = min(nq, q0 + query_block)
@@ -343,6 +361,12 @@ def batched_search(index, queries: np.ndarray, nprobe: int = 16,
         size_of = np.zeros(index.nlist, dtype=np.int64)
         start_of[uniq] = arena_start
         size_of[uniq] = uniq_sizes
+        if with_keys:
+            # probe rank of each cluster per query (same for every shard of a
+            # shared-quantizer plan, since probes only depend on centroids)
+            rank_of = np.zeros((qb, index.nlist), np.uint64)
+            rank_of[np.arange(qb)[:, None], blk_probes] = np.arange(
+                blk_probes.shape[1], dtype=np.uint64)[None]
 
         # --- per-query padded candidate rows (probe order == oracle order) -
         pp_sizes = size_of[blk_probes]              # (qb, P)
@@ -440,6 +464,10 @@ def batched_search(index, queries: np.ndarray, nprobe: int = 16,
             res_slot.append(np.arange(n_found, dtype=np.int64))
             res_cluster.append(uniq[span])
             res_offset.append(p - arena_start[span])
+            if with_keys:
+                res_key.append(
+                    (rank_of[i, uniq[span]] << np.uint64(40))
+                    | (p - arena_start[span]).astype(np.uint64))
 
     # --- late id resolution: one pass over every winning pair --------------
     t_res = time.perf_counter()
@@ -449,6 +477,8 @@ def batched_search(index, queries: np.ndarray, nprobe: int = 16,
         ids = resolve_ids_batch(
             index, np.concatenate(res_cluster), np.concatenate(res_offset))
         all_ids[rq, rs] = ids
+        if with_keys:
+            all_keys[rq, rs] = np.concatenate(res_key)
     resolve_s = time.perf_counter() - t_res
     index._last_resolve_s = resolve_s
 
@@ -460,5 +490,6 @@ def batched_search(index, queries: np.ndarray, nprobe: int = 16,
         distinct_probed=len(distinct),
         batches=nbatches,
         engine=engine,
+        merge_keys=all_keys,
     )
     return all_ids, all_d, stats

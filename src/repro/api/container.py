@@ -41,10 +41,31 @@ from .indexes import FlatIndex, GraphApiIndex, IVFApiIndex, as_api_index
 from .spec import IndexSpec, parse_spec
 
 __all__ = ["pack_index", "unpack_index", "save_index", "load_index",
-           "RIDX_MAGIC", "RIDX_VERSION"]
+           "wt_sequence", "RIDX_MAGIC", "RIDX_VERSION"]
 
 RIDX_MAGIC = b"RIDX"
 RIDX_VERSION = 2
+
+
+def wt_sequence(lists: List[np.ndarray], n: int, nlist: int):
+    """``(sequence, nsyms)`` for the wavelet tree over ``lists``.
+
+    Monolithically the lists partition ``[0, n)`` and the sequence is the
+    plain cluster-assignment string over ``nlist`` symbols (byte-identical
+    to the pre-shard behaviour).  A planner-made cluster shard covers only
+    part of the universe: absent ids map to the sentinel symbol ``nlist``
+    (alphabet ``nlist + 1``), which no search ever selects on, so
+    ``select(k, off)`` still returns *global* ids for every owned cluster.
+    The rule is a pure function of ``(lists, n, nlist)`` — the planner and
+    the RIDX loader apply it independently and agree, so ``id_bits()``
+    bookkeeping round-trips through save/load for shards too.
+    """
+    seq = np.full(n, nlist, np.int64)
+    for k, lst in enumerate(lists):
+        if len(lst):
+            seq[lst] = k
+    covered = int(sum(len(lst) for lst in lists))
+    return seq, (nlist if covered == n else nlist + 1)
 
 
 # ---------------------------------------------------------------------------
@@ -60,6 +81,10 @@ def pack_index(index, graph_codec: str = "webgraph") -> bytes:
     if isinstance(index, FlatIndex):
         meta.update(n=int(index.n), d=int(index.d))
         w.add("vecs", index.vecs.astype(np.float32).tobytes())
+        id_map = getattr(index, "id_map", None)
+        if id_map is not None:
+            meta["id_map"] = True
+            w.add("id_map", np.asarray(id_map, np.int64).tobytes())
     elif isinstance(index, IVFApiIndex):
         _pack_ivf_sections(w, meta, index.ivf)
     elif isinstance(index, GraphApiIndex):
@@ -93,6 +118,10 @@ def _pack_graph_sections(w: SectionWriter, meta: dict, g: GraphIndex,
     meta.update(n=int(g.n), d=int(g.x.shape[1]), entry=int(g.entry),
                 graph_codec=graph_codec)
     w.add("vecs", g.x.astype(np.float32).tobytes())
+    id_map = getattr(g, "id_map", None)
+    if id_map is not None:
+        meta["id_map"] = True
+        w.add("id_map", np.asarray(id_map, np.int64).tobytes())
     if graph_codec == "webgraph":
         ans = webgraph_encode(g.adj_raw, g.n)
         head, tail = ans.tobytes()
@@ -136,6 +165,8 @@ def unpack_index(raw: bytes):
         idx = FlatIndex(spec)
         idx.n, idx.d = m["n"], m["d"]
         idx.vecs = _f32(r.section("vecs"), (m["n"], m["d"]))
+        if m.get("id_map"):
+            idx.id_map = np.frombuffer(r.section("id_map"), np.int64).copy()
         return idx
     if spec.kind == "ivf":
         return IVFApiIndex.from_built(_unpack_ivf(r, spec), spec)
@@ -172,7 +203,8 @@ def _unpack_ivf(r: SectionReader, spec: IndexSpec) -> IVFIndex:
     cm = m["code"]
     if cm is None:
         ivf.codes = None
-        ivf.vecs = _f32(r.section("vecs"), (n, d))
+        # shards store fewer rows than the global universe n
+        ivf.vecs = _f32(r.section("vecs"), (int(ivf.sizes.sum()), d))
         ivf._code_blob = None
     elif cm.get("raw"):
         ivf.vecs = None
@@ -189,7 +221,8 @@ def _unpack_ivf(r: SectionReader, spec: IndexSpec) -> IVFIndex:
     # online id structures: deterministic re-encode from the decoded lists,
     # so size_bits bookkeeping matches the pre-save index exactly
     if spec.ids in ("wt", "wt1"):
-        ivf._wt = WaveletTree.build(ivf.cluster_of, nlist,
+        seq, nsyms = wt_sequence(ivf._lists, n, nlist)
+        ivf._wt = WaveletTree.build(seq, nsyms,
                                     compressed=(spec.ids == "wt1"))
         ivf._blobs = None
     else:
@@ -209,6 +242,8 @@ def _unpack_graph(r: SectionReader, spec: IndexSpec) -> GraphIndex:
     g.n = n
     g.x = _f32(r.section("vecs"), (n, d))
     g.entry = int(m["entry"])
+    if m.get("id_map"):
+        g.id_map = np.frombuffer(r.section("id_map"), np.int64).copy()
     if m["graph_codec"] == "webgraph":
         ans = StreamANS.frombytes(r.section("graph_head"),
                                   r.section("graph_tail"))

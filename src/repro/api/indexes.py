@@ -51,10 +51,19 @@ class _SpecMixin:
 
 
 class FlatIndex(_SpecMixin):
-    """Exact brute-force search over raw f32 vectors (the recall oracle)."""
+    """Exact brute-force search over raw f32 vectors (the recall oracle).
+
+    ``id_map`` (set by the shard planner, serialized in RIDX v2) remaps
+    local row indices to global database ids: a hash-partitioned shard
+    holds a row subset but still answers with the unsharded id space.
+    Rows are kept in ascending global-id order, so the stable local
+    tie-break (smaller row first) coincides with the monolithic one
+    (smaller id first) and sharded merges stay bit-identical.
+    """
 
     def __init__(self, spec: Optional[IndexSpec] = None):
         self.index_spec = spec or IndexSpec(kind="flat")
+        self.id_map: Optional[np.ndarray] = None
 
     def build(self, x: np.ndarray, seed: int = 0) -> "FlatIndex":
         del seed  # no trained state; accepted for protocol uniformity
@@ -63,6 +72,9 @@ class FlatIndex(_SpecMixin):
         return self
 
     def add(self, x: np.ndarray) -> "FlatIndex":
+        if getattr(self, "id_map", None) is not None:
+            raise ValueError("cannot add() to a planner-made Flat shard: "
+                             "its global-id mapping is fixed by the plan")
         x = np.asarray(x, np.float32)
         if x.ndim == 1:
             x = x[None]
@@ -86,21 +98,27 @@ class FlatIndex(_SpecMixin):
             sel = select_topk(d, k_eff)
             ids[qi, :k_eff] = sel
             dists[qi, :k_eff] = d[sel]
+        id_map = getattr(self, "id_map", None)
+        if id_map is not None:
+            # remap valid slots only: padding must stay id 0 / dist inf
+            ids = np.where(np.isfinite(dists), id_map[ids], 0)
         stats = SearchStats(wall_s=time.perf_counter() - t0,
                             ndis=self.n * nq, id_resolve_s=0.0, engine="flat")
         return dists, ids, stats
 
     def memory_ledger(self) -> Dict[str, float]:
+        id_map = getattr(self, "id_map", None)
+        map_bytes = float(id_map.nbytes) if id_map is not None else 0.0
         return {
             "n": self.n,
-            "ids_bytes": 0.0,
-            "ids_bytes_unc64": 0.0,
-            "ids_bytes_compact": 0.0,
+            "ids_bytes": map_bytes,
+            "ids_bytes_unc64": map_bytes,
+            "ids_bytes_compact": map_bytes,
             "payload_bytes": float(self.vecs.nbytes),
             "payload_bytes_unc": float(self.vecs.nbytes),
             "centroid_bytes": 0.0,
             "decoded_cache_bytes": 0.0,
-            "total_bytes": float(self.vecs.nbytes),
+            "total_bytes": float(self.vecs.nbytes) + map_bytes,
         }
 
 
@@ -142,16 +160,19 @@ class IVFApiIndex(_SpecMixin):
         return self
 
     def search(self, queries: np.ndarray, k: int = 10, nprobe: int = 16,
-               engine: Optional[str] = None, query_block: int = 64):
+               engine: Optional[str] = None, query_block: int = 64,
+               with_keys: bool = False):
         ids, dists, stats = self.ivf.search(
             np.asarray(queries, np.float32), nprobe=nprobe, topk=k,
             engine=engine or self.index_spec.engine or "auto",
-            query_block=query_block)
+            query_block=query_block, with_keys=with_keys)
         return dists, ids, stats
 
     def memory_ledger(self) -> Dict[str, float]:
         idx = self.ivf
-        n = idx.n
+        # vectors actually held: == n monolithically, < n for a planner-made
+        # cluster shard (whose id universe stays the global n)
+        n = int(idx.sizes.sum())
         id_bytes = idx.id_bits() / 8.0
         if idx.codes is not None:
             payload = idx.codes.shape[1] * n * idx.code_bits_per_element() / 8.0
@@ -163,7 +184,7 @@ class IVFApiIndex(_SpecMixin):
             "n": n,
             "ids_bytes": id_bytes,
             "ids_bytes_unc64": 8.0 * n,
-            "ids_bytes_compact": float(np.ceil(np.log2(max(2, n)))) * n / 8.0,
+            "ids_bytes_compact": float(np.ceil(np.log2(max(2, idx.n)))) * n / 8.0,
             "payload_bytes": payload,
             "payload_bytes_unc": payload_unc,
             "centroid_bytes": idx.centroids.nbytes,
@@ -207,6 +228,9 @@ class GraphApiIndex(_SpecMixin):
         return self
 
     def add(self, x: np.ndarray) -> "GraphApiIndex":
+        if getattr(self.graph, "id_map", None) is not None:
+            raise ValueError("cannot add() to a planner-made graph shard: "
+                             "its global-id mapping is fixed by the plan")
         self.graph.add(x, r=self.index_spec.degree)
         return self
 
@@ -218,24 +242,32 @@ class GraphApiIndex(_SpecMixin):
             ef=ef if ef is not None else max(16, 2 * k), topk=k,
             engine=engine or self.index_spec.engine or "auto",
             query_block=query_block)
+        id_map = getattr(self.graph, "id_map", None)
+        if id_map is not None:
+            # shard planner remap (local node -> global id); padding slots
+            # (dist inf) must stay id 0, matching the monolithic convention
+            ids = np.where(np.isfinite(dists), id_map[ids], 0)
         return dists, ids, stats
 
     def memory_ledger(self) -> Dict[str, float]:
         g = self.graph
         edges = sum(len(a) for a in g.adj_raw)
         id_bytes = g.id_bits() / 8.0
+        id_map = getattr(g, "id_map", None)
+        map_bytes = float(id_map.nbytes) if id_map is not None else 0.0
         cache = g.decoded_cache.stats()
         return {
             "n": g.n,
             "edges": edges,
-            "ids_bytes": id_bytes,
-            "ids_bytes_unc64": 8.0 * edges,
-            "ids_bytes_compact": float(np.ceil(np.log2(max(2, g.n)))) * edges / 8.0,
+            "ids_bytes": id_bytes + map_bytes,
+            "ids_bytes_unc64": 8.0 * edges + map_bytes,
+            "ids_bytes_compact": float(np.ceil(np.log2(max(2, g.n)))) * edges / 8.0
+            + map_bytes,
             "payload_bytes": float(g.x.nbytes),
             "payload_bytes_unc": float(g.x.nbytes),
             "centroid_bytes": 0.0,
             "decoded_cache_bytes": cache["bytes"],
-            "total_bytes": id_bytes + g.x.nbytes + cache["bytes"],
+            "total_bytes": id_bytes + map_bytes + g.x.nbytes + cache["bytes"],
         }
 
 

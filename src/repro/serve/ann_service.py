@@ -69,6 +69,8 @@ class Ticket:
     batch_size: int = 0            # total queries in the flushed batch
     wait_s: float = 0.0            # enqueue -> flush start
     search_s: float = 0.0          # batch search wall time (shared)
+    latency_s: float = 0.0         # submit -> results ready (wait + search)
+    keys: Optional[np.ndarray] = None  # stable-merge keys (with_keys searches)
 
 
 class AnnService:
@@ -115,9 +117,11 @@ class AnnService:
         self.decodes = 0
         self.search_s = 0.0
         self.resolve_s = 0.0
+        self.last_stats = None         # SearchStats of the most recent flush
         # bounded: long-lived replicas must not grow per-request state
         self._batch_sizes: "deque[int]" = deque(maxlen=4096)
         self._waits: "deque[float]" = deque(maxlen=4096)
+        self._lats: "deque[float]" = deque(maxlen=4096)
 
     # -- request path --------------------------------------------------------
     def submit(self, queries: np.ndarray) -> Ticket:
@@ -157,6 +161,9 @@ class AnnService:
         batch = np.concatenate(qs, axis=0)
         dists, ids, st = self.index.search(batch, k=self.topk,
                                            **self.search_opts)
+        done_at = self.clock()
+        self.last_stats = st
+        keys = getattr(st, "merge_keys", None)
         self.batches += 1
         self.ndis += st.ndis
         self.decodes += st.decodes
@@ -167,13 +174,17 @@ class AnnService:
         for t in tickets:
             t.ids = ids[row: row + t.n_queries]
             t.dists = dists[row: row + t.n_queries]
+            if keys is not None:
+                t.keys = keys[row: row + t.n_queries]
             row += t.n_queries
             t.done = True
             t.batch_id = self.batches - 1
             t.batch_size = batch.shape[0]
             t.wait_s = max(0.0, now - t.enqueued_at)
             t.search_s = st.wall_s
+            t.latency_s = max(0.0, done_at - t.enqueued_at)
             self._waits.append(t.wait_s)
+            self._lats.append(t.latency_s)
         return tickets
 
     def search(self, queries: np.ndarray):
@@ -191,10 +202,26 @@ class AnnService:
 
     # -- accounting ----------------------------------------------------------
     def stats(self) -> Dict[str, float]:
-        """Counters are lifetime totals; batch/wait distributions cover the
-        last 4096 samples (bounded window)."""
+        """Service counters and SLO accounting.
+
+        Keys — counters are lifetime totals (since ``reset_stats``);
+        distributions cover the last 4096 samples (bounded window):
+
+        * ``requests`` / ``queries`` / ``batches`` — totals.
+        * ``mean_batch`` / ``max_batch`` — flushed-batch size distribution.
+        * ``mean_wait_s`` / ``p99_wait_s`` — enqueue -> flush-start wait
+          (the micro-batching cost in isolation).
+        * ``p50_latency_s`` / ``p95_latency_s`` / ``mean_latency_s`` —
+          per-ticket submit -> results-ready wall time (wait + batched
+          search), the per-request SLO numbers the sharded router reports.
+        * ``search_s`` / ``resolve_s`` — cumulative index search wall and
+          late-id-resolution time.
+        * ``ndis`` / ``decodes`` — distance evaluations and id-list decode
+          events (LRU misses).
+        """
         bs = np.asarray(self._batch_sizes, np.float64)
         ws = np.asarray(self._waits, np.float64)
+        ls = np.asarray(self._lats, np.float64)
         return {
             "requests": self.requests,
             "queries": self.queries,
@@ -203,6 +230,9 @@ class AnnService:
             "max_batch": float(bs.max()) if bs.size else 0.0,
             "mean_wait_s": float(ws.mean()) if ws.size else 0.0,
             "p99_wait_s": float(np.quantile(ws, 0.99)) if ws.size else 0.0,
+            "mean_latency_s": float(ls.mean()) if ls.size else 0.0,
+            "p50_latency_s": float(np.quantile(ls, 0.50)) if ls.size else 0.0,
+            "p95_latency_s": float(np.quantile(ls, 0.95)) if ls.size else 0.0,
             "search_s": self.search_s,
             "resolve_s": self.resolve_s,
             "ndis": self.ndis,

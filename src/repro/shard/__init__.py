@@ -1,0 +1,22 @@
+"""repro.shard — sharded ANN serving: planner, scatter/merge router, faults.
+
+One machine's RAM bounds one :class:`repro.serve.AnnService`; this
+package is the capacity story past that bound.  ``plan_shards`` splits a
+built index into N standalone shard artifacts (RIDX v2 + JSON manifest),
+:class:`ShardedAnnService` scatters query batches across per-shard
+workers and k-way merges the answers bit-identically to the unsharded
+index, and :mod:`repro.shard.faults` degrades gracefully when shards
+slow down or die.
+"""
+
+from .faults import (FaultPolicy, RandomFaults, RetryPolicy, ScriptedFaults,
+                     ShardDead, ShardFault, ShardTimeout)
+from .plan import ShardInfo, ShardPlan, plan_shards
+from .service import ShardedAnnService, ShardTicket
+
+__all__ = [
+    "plan_shards", "ShardPlan", "ShardInfo",
+    "ShardedAnnService", "ShardTicket",
+    "FaultPolicy", "ScriptedFaults", "RandomFaults", "RetryPolicy",
+    "ShardFault", "ShardTimeout", "ShardDead",
+]

@@ -1,0 +1,361 @@
+"""Sharded serving subsystem: planner, scatter/merge parity, faults.
+
+The load-bearing claim (ISSUE acceptance): ``ShardedAnnService.search``
+over a plan's shards is **bit-identical** — ids AND distances — to
+searching the unsharded index, for every id codec and engine, as long as
+no faults are injected.  Plus graceful degradation: a dead/slow shard
+yields partial results (``stats.partial=True``), never an exception.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import index_factory
+from repro.serve import AnnService, BatchPolicy
+from repro.shard import (RetryPolicy, ScriptedFaults, ShardedAnnService,
+                         ShardPlan, plan_shards)
+
+K = 12
+NPROBE = 5
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal((1500, 16)).astype(np.float32)
+    # duplicate vectors -> exact distance ties; the merge must reproduce
+    # the monolithic tie order, not just the distances
+    x[200] = x[100]
+    x[201] = x[100]
+    q = rng.standard_normal((9, 16)).astype(np.float32)
+    return x, q
+
+
+def _mono(data, spec, **build_kw):
+    x, _ = data
+    return index_factory(spec).build(x, seed=0, **build_kw)
+
+
+# ---------------------------------------------------------------------------
+# parity matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ids", ["roc", "wt", "gap_ans"])
+@pytest.mark.parametrize("nshards", [1, 2, 5])
+def test_ivf_shard_parity_matrix(data, ids, nshards):
+    x, q = data
+    mono = _mono(data, f"IVF32,ids={ids}")
+    d0, i0, _ = mono.search(q, k=K, nprobe=NPROBE)
+    plan = plan_shards(mono, nshards)
+    svc = ShardedAnnService(plan, topk=K, nprobe=NPROBE)
+    ids_s, d_s, st = svc.search(q, with_stats=True)
+    svc.close()
+    np.testing.assert_array_equal(ids_s, i0)
+    np.testing.assert_array_equal(d_s, d0)
+    assert st.partial is False and st.shards == nshards
+    assert st.shards_failed == 0
+
+
+@pytest.mark.parametrize("by", ["range", "hash"])
+def test_ivf_shard_parity_schemes(data, by):
+    x, q = data
+    mono = _mono(data, "IVF32,ids=roc")
+    d0, i0, _ = mono.search(q, k=K, nprobe=NPROBE)
+    plan = plan_shards(mono, 3, by=by)
+    svc = ShardedAnnService(plan, topk=K, nprobe=NPROBE)
+    ids_s, d_s = svc.search(q)
+    svc.close()
+    np.testing.assert_array_equal(ids_s, i0)
+    np.testing.assert_array_equal(d_s, d0)
+
+
+def test_ivf_uneven_shards_and_k_over_shard_capacity(data):
+    """Pathological split: one shard owns 2 clusters (often fewer than k
+    candidates under the probe set), another owns 28."""
+    x, q = data
+    mono = _mono(data, "IVF32,ids=roc")
+    d0, i0, _ = mono.search(q, k=K, nprobe=NPROBE)
+    plan = plan_shards(mono, 3, by="range", boundaries=[0, 2, 30, 32])
+    assert [s.clusters for s in plan.shards] == [[0, 2], [2, 30], [30, 32]]
+    svc = ShardedAnnService(plan, topk=K, nprobe=NPROBE)
+    ids_s, d_s = svc.search(q)
+    svc.close()
+    np.testing.assert_array_equal(ids_s, i0)
+    np.testing.assert_array_equal(d_s, d0)
+
+
+def test_ivf_shard_parity_pallas_engine(data):
+    x, q = data
+    mono = index_factory("IVF16,ids=roc").build(x[:400], seed=0)
+    d0, i0, _ = mono.search(q[:4], k=8, nprobe=4, engine="pallas")
+    svc = ShardedAnnService(plan_shards(mono, 2), topk=8,
+                            nprobe=4, engine="pallas")
+    ids_s, d_s = svc.search(q[:4])
+    svc.close()
+    np.testing.assert_array_equal(ids_s, i0)
+    np.testing.assert_array_equal(d_s, d0)
+
+
+def test_ivf_shard_parity_pq_polya(data):
+    x, q = data
+    mono = _mono(data, "IVF32,PQ4,ids=gap_ans,codes=polya")
+    d0, i0, _ = mono.search(q, k=K, nprobe=NPROBE)
+    svc = ShardedAnnService(plan_shards(mono, 2), topk=K, nprobe=NPROBE)
+    ids_s, d_s = svc.search(q)
+    svc.close()
+    np.testing.assert_array_equal(ids_s, i0)
+    np.testing.assert_array_equal(d_s, d0)
+
+
+def test_flat_shard_parity(data):
+    x, q = data
+    mono = index_factory("Flat").build(x)
+    d0, i0, _ = mono.search(q, k=K)
+    svc = ShardedAnnService(plan_shards(mono, 3), topk=K)
+    ids_s, d_s = svc.search(q)
+    svc.close()
+    np.testing.assert_array_equal(ids_s, i0)
+    np.testing.assert_array_equal(d_s, d0)
+
+
+@pytest.mark.parametrize("nshards", [1, 2])
+def test_nsg_shard_parity_exhaustive(nshards):
+    """Graph shards are rebuilt subgraphs, so parity holds in the
+    exhaustive regime (ef >= n): every shard then returns its true
+    per-partition top-k and the merge equals exact search."""
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((300, 8)).astype(np.float32)
+    q = rng.standard_normal((5, 8)).astype(np.float32)
+    mono = index_factory("NSG8,ids=roc").build(x, seed=0)
+    d0, i0, _ = mono.search(q, k=10, ef=400)
+    svc = ShardedAnnService(plan_shards(mono, nshards, seed=0),
+                            topk=10, ef=400)
+    ids_s, d_s = svc.search(q)
+    svc.close()
+    np.testing.assert_array_equal(ids_s, i0)
+    np.testing.assert_array_equal(d_s, d0)
+
+
+# ---------------------------------------------------------------------------
+# manifest + artifacts
+# ---------------------------------------------------------------------------
+
+def test_plan_save_load_roundtrip(tmp_path, data):
+    x, q = data
+    mono = _mono(data, "IVF32,ids=wt")
+    d0, i0, _ = mono.search(q, k=K, nprobe=NPROBE)
+    plan = plan_shards(mono, 3)
+    mpath = plan.save(tmp_path)
+    assert mpath.name == "shards.json"
+    loaded = ShardPlan.load(tmp_path)
+    assert loaded.source_spec == "IVF32,ids=wt"
+    assert loaded.nshards == 3 and loaded.n == len(x)
+    # per-shard id_bits bookkeeping must round-trip (wt sentinel rule)
+    for a, b in zip(plan.indexes, loaded.indexes):
+        assert a.ivf.id_bits() == b.ivf.id_bits()
+    svc = ShardedAnnService(loaded, topk=K, nprobe=NPROBE)
+    ids_s, d_s = svc.search(q)
+    svc.close()
+    np.testing.assert_array_equal(ids_s, i0)
+    np.testing.assert_array_equal(d_s, d0)
+
+
+def test_manifest_contents(data):
+    x, _ = data
+    mono = _mono(data, "IVF32,ids=roc")
+    plan = plan_shards(mono, 4)
+    m = plan.manifest()
+    assert m["format"] == "ridx-shards" and m["kind"] == "ivf"
+    assert m["by"] == "range" and m["nshards"] == 4
+    assert sum(s["n_local"] for s in m["shards"]) == len(x)
+    for s in m["shards"]:
+        assert s["spec"] == "IVF32,ids=roc"
+        assert s["ledger"]["total_bytes"] > 0
+        assert s["ledger"]["ids_bytes"] > 0
+        lo, hi = s["clusters"]
+        assert 0 <= lo <= hi <= 32
+    # shards partition the id universe
+    seen = np.zeros(len(x), bool)
+    for idx in plan.indexes:
+        held = np.concatenate([l for l in idx.ivf._lists if len(l)])
+        assert not seen[held].any()
+        seen[held] = True
+    assert seen.all()
+
+
+def test_plan_validation(data):
+    mono = _mono(data, "IVF32,ids=roc")
+    with pytest.raises(ValueError):
+        plan_shards(mono, 0)
+    with pytest.raises(ValueError):
+        plan_shards(mono, 2, by="range", boundaries=[0, 40, 32])
+    with pytest.raises(ValueError):
+        plan_shards(mono, 2, by="zone")
+    with pytest.raises(ValueError):
+        plan_shards(mono, 2, assignments=np.zeros(7, np.int64))
+    # shard indexes are frozen id universes: add() must refuse
+    x, _ = data
+    flat = index_factory("Flat").build(x)
+    shard = plan_shards(flat, 2).indexes[0]
+    with pytest.raises(ValueError):
+        shard.add(x[:3])
+
+
+def test_custom_assignments(data):
+    x, q = data
+    mono = _mono(data, "IVF32,ids=roc")
+    d0, i0, _ = mono.search(q, k=K, nprobe=NPROBE)
+    rng = np.random.default_rng(0)
+    owner = rng.integers(0, 3, size=32)
+    plan = plan_shards(mono, 3, assignments=owner)
+    assert plan.by == "custom"
+    svc = ShardedAnnService(plan, topk=K, nprobe=NPROBE)
+    ids_s, d_s = svc.search(q)
+    svc.close()
+    np.testing.assert_array_equal(ids_s, i0)
+    np.testing.assert_array_equal(d_s, d0)
+
+
+# ---------------------------------------------------------------------------
+# faults + degraded mode
+# ---------------------------------------------------------------------------
+
+def test_dead_shard_degrades_to_partial(data):
+    x, q = data
+    mono = _mono(data, "IVF32,ids=roc")
+    plan = plan_shards(mono, 3)
+    svc = ShardedAnnService(plan, topk=K, nprobe=NPROBE,
+                            fault_policy=ScriptedFaults(dead=[1]),
+                            retry=RetryPolicy(sleep=lambda s: None))
+    ids_s, d_s, st = svc.search(q, with_stats=True)  # must not raise
+    svc.close()
+    assert st.partial is True
+    assert st.shards_failed == 1 and st.shards == 3
+    # survivors still answer: results are the merge of shards 0 and 2
+    assert np.isfinite(d_s[:, 0]).all()
+    dead_ids = np.concatenate(
+        [l for l in plan.indexes[1].ivf._lists if len(l)])
+    assert not np.isin(ids_s[np.isfinite(d_s)], dead_ids).any()
+    assert svc.stats()["partial_batches"] == 1.0
+    assert svc.stats()["shards_failed"] == 1.0
+
+
+def test_all_shards_dead_still_no_crash(data):
+    x, q = data
+    mono = _mono(data, "IVF32,ids=roc")
+    svc = ShardedAnnService(plan_shards(mono, 2), topk=K, nprobe=NPROBE,
+                            fault_policy=ScriptedFaults(dead=[0, 1]),
+                            retry=RetryPolicy(sleep=lambda s: None))
+    ids_s, d_s, st = svc.search(q, with_stats=True)
+    svc.close()
+    assert st.partial is True and st.shards_failed == 2
+    assert np.isinf(d_s).all() and (ids_s == 0).all()
+
+
+def test_flaky_shard_retry_recovers_full_results(data):
+    x, q = data
+    mono = _mono(data, "IVF32,ids=roc")
+    d0, i0, _ = mono.search(q, k=K, nprobe=NPROBE)
+    svc = ShardedAnnService(
+        plan_shards(mono, 3), topk=K, nprobe=NPROBE,
+        fault_policy=ScriptedFaults(flaky={0: 1, 2: 1}),
+        retry=RetryPolicy(max_attempts=3, sleep=lambda s: None))
+    ids_s, d_s, st = svc.search(q, with_stats=True)
+    svc.close()
+    assert st.partial is False and st.shards_failed == 0
+    assert st.retries == 2
+    np.testing.assert_array_equal(ids_s, i0)
+    np.testing.assert_array_equal(d_s, d0)
+
+
+def test_retries_exhausted_degrades(data):
+    x, q = data
+    mono = _mono(data, "IVF32,ids=roc")
+    svc = ShardedAnnService(
+        plan_shards(mono, 2), topk=K, nprobe=NPROBE,
+        fault_policy=ScriptedFaults(flaky={0: 99}),
+        retry=RetryPolicy(max_attempts=2, sleep=lambda s: None))
+    _, _, st = svc.search(q, with_stats=True)
+    svc.close()
+    assert st.partial is True and st.shards_failed == 1
+    assert len(svc.fault_log) == 1
+
+
+def test_deadline_drops_slow_shard(data):
+    x, q = data
+    mono = _mono(data, "IVF32,ids=roc")
+    svc = ShardedAnnService(
+        plan_shards(mono, 3), topk=K, nprobe=NPROBE, deadline_s=0.05,
+        fault_policy=ScriptedFaults(delay_s={2: 1.0}),
+        retry=RetryPolicy(max_attempts=1))
+    _, _, st = svc.search(q, with_stats=True)
+    svc.close()
+    assert st.partial is True and st.shards_failed == 1
+
+
+# ---------------------------------------------------------------------------
+# cache budget + stats surface
+# ---------------------------------------------------------------------------
+
+def test_cache_budget_split_across_shards(data):
+    x, q = data
+    mono = _mono(data, "IVF32,ids=roc")
+    budget_mb = 1.0
+    svc = ShardedAnnService(plan_shards(mono, 4), topk=K, nprobe=NPROBE,
+                            cache_mb=budget_mb)
+    for w in svc._workers:
+        assert w.index.ivf.decoded_cache.max_bytes == int(
+            budget_mb / 4 * (1 << 20))
+    for _ in range(3):
+        svc.search(q)
+    led = svc.memory_ledger()
+    svc.close()
+    assert led["shards"] == 4.0
+    # aggregate decoded-cache residency respects the global budget
+    assert 0 < led["decoded_cache_bytes"] <= budget_mb * (1 << 20)
+    # aggregate compressed ids beat the compact baseline like the mono index
+    assert led["ids_bytes"] < led["ids_bytes_compact"] < led["ids_bytes_unc64"]
+
+
+def test_sharded_stats_and_latency_keys(data):
+    x, q = data
+    mono = _mono(data, "IVF32,ids=roc")
+    svc = ShardedAnnService(plan_shards(mono, 2), topk=K, nprobe=NPROBE)
+    for i in range(4):
+        svc.search(q[i:i + 2])
+    st = svc.stats()
+    svc.close()
+    assert st["requests"] == 4 and st["queries"] == 8
+    assert st["batches"] == 4 and st["shards"] == 2.0
+    assert st["partial_batches"] == 0.0 and st["retries"] == 0.0
+    assert 0.0 < st["p50_latency_s"] <= st["p95_latency_s"]
+    assert st["mean_latency_s"] > 0.0 and st["merge_s"] > 0.0
+    ws = svc.worker_stats()
+    assert len(ws) == 2 and all(w["batches"] == 4 for w in ws)
+
+
+def test_ann_service_latency_percentiles(data):
+    """Satellite: per-ticket submit->flush latency percentiles on the
+    monolithic AnnService, deterministic via the injectable clock."""
+    x, q = data
+    mono = _mono(data, "IVF32,ids=roc")
+    t = [0.0]
+
+    def clock():
+        t[0] += 0.010
+        return t[0]
+
+    svc = AnnService(mono, topk=5, nprobe=2, clock=clock,
+                     policy=BatchPolicy(max_batch=10**9,
+                                        max_wait_s=float("inf")))
+    for i in range(5):
+        svc.submit(q[i:i + 1])
+    svc.flush()
+    st = svc.stats()
+    # clock ticks 10ms per call: submit i enqueues at tick i+1 (plus one
+    # tick() probe each), flush reads start/done ticks after the last
+    assert st["p50_latency_s"] > 0.0
+    assert st["p95_latency_s"] >= st["p50_latency_s"] >= 0.0
+    assert st["mean_latency_s"] >= st["mean_wait_s"]
+    for key in ("p50_latency_s", "p95_latency_s", "mean_latency_s"):
+        assert key in svc.stats.__doc__  # documented stat keys
