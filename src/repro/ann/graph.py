@@ -24,7 +24,7 @@ from typing import List, Optional
 import numpy as np
 
 from ..core.codecs import get_codec
-from .scan import DecodedListCache
+from .scan import CacheOwnerMixin, DecodedListCache
 from .stats import SearchStats
 
 __all__ = ["knn_graph", "build_nsg", "build_hnsw", "GraphIndex"]
@@ -105,9 +105,11 @@ def build_hnsw(x: np.ndarray, m: int, seed: int = 0) -> List[np.ndarray]:
 
 
 @dataclasses.dataclass
-class GraphIndex:
+class GraphIndex(CacheOwnerMixin):
     id_codec: str = "roc"
     cache_bytes: Optional[int] = None    # DecodedListCache budget (None = default)
+    cache_policy: str = "lru"            # "lru" | "2q"
+    max_epochs: Optional[int] = None     # auto-compact past this universe count
 
     def build(self, x: np.ndarray, adj: List[np.ndarray]) -> "GraphIndex":
         self.x = x.astype(np.float32)
@@ -116,36 +118,34 @@ class GraphIndex:
         codec = get_codec(self.id_codec)
         self._codec = codec
         self._blobs = [codec.encode(a, self.n) if len(a) else None for a in adj]
+        # per-node encoding universe — the graph analogue of the IVF epoch
+        # scheme: a blob decodes against the universe it was sealed at, so
+        # appends only re-encode the nodes they actually touch
+        self._universes = np.full(self.n, self.n, np.int64)
         # entry point: medoid
         mean = self.x.mean(0)
         self.entry = int(np.argmin(np.sum((self.x - mean) ** 2, axis=1)))
         self._decoded_cache = self._new_cache()
         return self
 
-    def _new_cache(self) -> DecodedListCache:
-        if self.cache_bytes is not None:
-            return DecodedListCache(max_bytes=self.cache_bytes)
-        return DecodedListCache()
-
-    @property
-    def decoded_cache(self) -> DecodedListCache:
-        # lazily attached so indexes built before this field existed still work
-        if not hasattr(self, "_decoded_cache"):
-            self._decoded_cache = self._new_cache()
-        return self._decoded_cache
-
     def add(self, x_new: np.ndarray, r: int = 16) -> "GraphIndex":
         """Incremental HNSW-style insertion of new vectors.
 
-        Each new node gets <= ``r`` out-edges via the same occlusion rule the
-        offline builders use (candidates = nearest existing nodes), plus
-        reverse edges on its neighbors up to the ``r`` cap.  Every friend
-        list is then re-encoded (the id universe grew, which changes every
-        blob's rate and decode) and the decoded-list cache is invalidated.
+        Each new node gets <= ``r`` out-edges via the same occlusion rule
+        the offline builders use (candidates = nearest existing nodes),
+        plus reverse edges on its neighbors up to the ``r`` cap.  Only the
+        *touched* friend lists re-encode — new nodes, plus existing nodes
+        that gained a reverse edge — at the grown universe; every other
+        blob keeps its original universe (recorded in ``_universes``) and
+        stays byte-identical, so ingest is O(Δ · degree), not O(n).  Only
+        the touched nodes' cache entries are invalidated.
         """
         x_new = np.asarray(x_new, np.float32)
         if x_new.ndim == 1:
             x_new = x_new[None]
+        if x_new.shape[0] == 0:
+            return self
+        touched: set = set()
         for row in x_new:
             i = self.n
             self.x = np.concatenate([self.x, row[None]], axis=0)
@@ -154,13 +154,38 @@ class GraphIndex:
             kept = _occlusion_prune(self.x, cand, i, r)
             self.n = i + 1
             self.adj_raw.append(np.asarray(sorted(kept), np.int64))
+            self._blobs.append(None)
             for j in kept:
                 if len(self.adj_raw[j]) < r and i not in self.adj_raw[j]:
                     self.adj_raw[j] = np.asarray(
                         sorted(np.append(self.adj_raw[j], i)), np.int64)
-        # the universe grew: every blob's rate/decode depends on n, re-encode
+                    touched.add(int(j))
+        touched.update(range(self.n - x_new.shape[0], self.n))
+        self._universes = np.concatenate(
+            [self._universes, np.full(x_new.shape[0], self.n, np.int64)])
+        for i in sorted(touched):
+            a = self.adj_raw[i]
+            self._blobs[i] = self._codec.encode(a, self.n) if len(a) else None
+            self._universes[i] = self.n
+            self.decoded_cache.invalidate(i)
+        if (self.max_epochs is not None
+                and self.n_epochs > self.max_epochs):
+            self.compact()
+        return self
+
+    @property
+    def n_epochs(self) -> int:
+        """Distinct encoding universes currently live (1 after compact)."""
+        return int(np.unique(self._universes).size)
+
+    def compact(self) -> "GraphIndex":
+        """Re-encode every friend list at the current universe.
+
+        Collapses ``_universes`` to a single value — the offline builders'
+        rates again — at O(n) cost; run off the ingest path."""
         self._blobs = [self._codec.encode(a, self.n) if len(a) else None
                        for a in self.adj_raw]
+        self._universes = np.full(self.n, self.n, np.int64)
         self.decoded_cache.clear()
         return self
 
@@ -176,8 +201,9 @@ class GraphIndex:
         blob = self._blobs[i]
         if blob is None:
             return np.zeros(0, np.int64)
+        universe = int(self._universes[i])
         return self.decoded_cache.get(
-            i, lambda: np.asarray(self._codec.decode(blob, self.n)))
+            i, lambda: np.asarray(self._codec.decode(blob, universe)))
 
     def search(self, queries: np.ndarray, ef: int = 16, topk: int = 10,
                engine: str = "auto", query_block: int = 64,

@@ -6,6 +6,15 @@ stored through any ``repro.core.codecs`` codec (paper's online setting:
 one stream per cluster) or jointly through a wavelet tree (full random
 access, §4.1).
 
+Id (and Pólya code) storage is **epoched** (:class:`repro.core.epoch.
+EpochStore`): ``build`` seals one epoch over ``[0, n)``; each ``add``
+seals a new epoch over just the appended rows, so ingest entropy-codes
+O(Δ) data instead of re-encoding the whole index, and ``compact`` folds
+the epochs back into one blob to recover single-universe rates.  The
+scanner is oblivious — per-cluster storage stays globally grouped
+(offsets/sizes/arena gathers unchanged) and the concatenated per-epoch
+lists are globally sorted, so only ``resolve_ids`` routes through epochs.
+
 Search implements the paper's late-id-resolution trick: the scanner keeps
 ``(cluster, offset)`` pairs in the top-k structure and resolves actual ids
 only for the final results — per-cluster decode (ROC/gap), random access
@@ -25,12 +34,11 @@ from typing import List, Optional
 
 import numpy as np
 
-from ..core.codecs import get_codec
+from ..core.epoch import EpochStore
 from ..core.polya import PolyaCodec
-from ..core.wavelet_tree import WaveletTree
 from .kmeans import assign, kmeans
 from .pq import ProductQuantizer
-from .scan import (DecodedListCache, batched_search, coarse_probes,
+from .scan import (CacheOwnerMixin, batched_search, coarse_probes,
                    resolve_ids_batch, score_rows_flat, select_topk)
 from .stats import SearchStats
 
@@ -38,12 +46,14 @@ __all__ = ["IVFIndex", "SearchStats"]
 
 
 @dataclasses.dataclass
-class IVFIndex:
+class IVFIndex(CacheOwnerMixin):
     nlist: int
     id_codec: str = "roc"
     pq: Optional[ProductQuantizer] = None
     code_codec: Optional[str] = None     # None | "polya"
     cache_bytes: Optional[int] = None    # DecodedListCache budget (None = default)
+    cache_policy: str = "lru"            # "lru" | "2q"
+    max_epochs: Optional[int] = None     # auto-compact past this epoch count
 
     def build(self, x: np.ndarray, seed: int = 0,
               centroids: Optional[np.ndarray] = None) -> "IVFIndex":
@@ -71,55 +81,32 @@ class IVFIndex:
         else:
             self.codes = None
             self.vecs = x[order].astype(np.float32)
-        # --- id compression -----------------------------------------------------
-        if self.id_codec == "wt":
-            self._wt = WaveletTree.build(assign_, self.nlist, compressed=False)
-            self._blobs = None
-        elif self.id_codec == "wt1":
-            self._wt = WaveletTree.build(assign_, self.nlist, compressed=True)
-            self._blobs = None
-        else:
-            self._wt = None
-            codec = get_codec(self.id_codec)
-            self._codec = codec
-            self._blobs = [
-                codec.encode(np.sort(lst), self.n) for lst in self._lists
-            ]
+        # --- id compression: one epoch over [0, n) ------------------------------
+        self._ids = EpochStore(self.nlist, self.id_codec)
+        self._ids.append(self._lists, 0, self.n)
         # --- optional code compression ------------------------------------------
         if self.code_codec == "polya" and self.codes is not None:
-            pc = PolyaCodec()
+            self._polya = PolyaCodec()
             per_cluster = [
                 self.codes[self.offsets[k]: self.offsets[k + 1]]
                 for k in range(self.nlist)
             ]
-            self._code_blob = pc.encode([c for c in per_cluster])
-            self._polya = pc
+            self._code_blobs = [self._polya.encode(per_cluster)]
         else:
-            self._code_blob = None
+            self._code_blobs = None
         self._decoded_cache = self._new_cache()
         return self
 
-    def _new_cache(self) -> DecodedListCache:
-        if self.cache_bytes is not None:
-            return DecodedListCache(max_bytes=self.cache_bytes)
-        return DecodedListCache()
-
-    @property
-    def decoded_cache(self) -> DecodedListCache:
-        # lazily attached so indexes built before this field existed
-        # (e.g. unpickled) still work
-        if not hasattr(self, "_decoded_cache"):
-            self._decoded_cache = self._new_cache()
-        return self._decoded_cache
-
+    # -- online ingest (epoch scheme) ---------------------------------------------
     def add(self, x: np.ndarray) -> "IVFIndex":
         """Append new vectors to a built index (ids ``n .. n+len(x)-1``).
 
-        New ids are larger than every existing id, so appending each one to
-        the tail of its cluster's list keeps storage order == sorted order
-        (the invariant ``resolve_ids`` relies on).  Touched clusters are
-        re-encoded; the wavelet tree / Pólya blob are rebuilt (they are
-        joint structures over all clusters).
+        Seals one new epoch over exactly the appended rows: only Δ ids
+        (and Δ PQ codes) are entropy-coded — existing epoch blobs, wavelet
+        trees and warm cache entries are untouched.  New ids are larger
+        than every existing id, so appending to each cluster's tail keeps
+        storage order == sorted order (the invariant ``resolve_ids``
+        relies on) across epochs.
         """
         x = np.asarray(x, np.float32)
         if x.ndim == 1:
@@ -127,62 +114,129 @@ class IVFIndex:
         m = x.shape[0]
         if m == 0:
             return self
-        assign_new = assign(x, self.centroids)
-        new_ids = np.arange(self.n, self.n + m, dtype=np.int64)
-        new_codes = self.pq.encode(x) if self.pq is not None else None
+        self.append_epoch(x, np.arange(self.n, self.n + m, dtype=np.int64), m)
+        return self
+
+    def append_epoch(self, x_new: np.ndarray, new_ids: np.ndarray,
+                     count: int) -> "IVFIndex":
+        """Seal the epoch ``[n, n + count)`` holding the given rows.
+
+        Monolithically ``add`` passes every new row; a cluster shard
+        passes only the rows whose cluster it owns but the *global*
+        ``count``, so epoch boundaries (and therefore every owned blob's
+        relative universe) stay identical across shards — the byte-parity
+        the sharded merge relies on.  ``new_ids`` must be strictly
+        ascending global ids inside the epoch range.
+        """
+        base = self.n
+        x_new = np.asarray(x_new, np.float32).reshape(-1, self.d)
+        new_ids = np.asarray(new_ids, np.int64)
+        if x_new.shape[0] != new_ids.shape[0]:
+            raise ValueError("one id per appended row")
+        if new_ids.size and (
+                int(new_ids[0]) < base
+                or int(new_ids[-1]) >= base + count
+                or np.any(np.diff(new_ids) <= 0)):
+            raise ValueError(
+                f"epoch ids must be strictly ascending within "
+                f"[{base}, {base + count})")
+        if new_ids.size:
+            assign_new = assign(x_new, self.centroids)
+            new_codes = self.pq.encode(x_new) if self.pq is not None else None
+        else:
+            assign_new = np.zeros(0, np.int64)
+            new_codes = None
         # regroup per-cluster storage with the new rows appended in id order
-        new_lists: List[np.ndarray] = []
+        # (O(n) memcpy — cheap next to entropy coding, and it keeps the
+        # batched scanner's offsets/sizes/arena layout unchanged)
+        rel_lists: List[np.ndarray] = []
+        epoch_codes: List[np.ndarray] = []
         vec_parts: List[np.ndarray] = []
         for k in range(self.nlist):
             sel = assign_new == k
-            new_lists.append(np.concatenate([self._lists[k], new_ids[sel]]))
+            rel_lists.append(new_ids[sel] - base)
+            self._lists[k] = np.concatenate([self._lists[k], new_ids[sel]])
             lo, hi = self.offsets[k], self.offsets[k + 1]
             if self.pq is not None:
                 vec_parts.append(self.codes[lo:hi])
                 if sel.any():
                     vec_parts.append(new_codes[sel])
+                epoch_codes.append(
+                    new_codes[sel] if new_codes is not None
+                    else np.zeros((0, self.pq.m), np.uint8))
             else:
                 vec_parts.append(self.vecs[lo:hi])
                 if sel.any():
-                    vec_parts.append(x[sel])
-        self._lists = new_lists
+                    vec_parts.append(x_new[sel])
         self.sizes = self.sizes + np.bincount(assign_new, minlength=self.nlist)
         self.offsets = np.concatenate([[0], np.cumsum(self.sizes)]).astype(np.int64)
         if self.pq is not None:
             self.codes = np.concatenate(vec_parts, axis=0)
         else:
             self.vecs = np.concatenate(vec_parts, axis=0)
-        self.cluster_of = np.concatenate([self.cluster_of, assign_new])
-        self.n += m
-        # id structures: joint ones rebuild, per-cluster ones re-encode.
-        # The universe grew from n-m to n, so *every* stream blob must be
-        # re-encoded (codec rates and decode both depend on the universe).
-        if self._wt is not None:
-            self._wt = WaveletTree.build(self.cluster_of, self.nlist,
-                                         compressed=(self.id_codec == "wt1"))
-        else:
-            self._blobs = [self._codec.encode(lst, self.n)
-                           for lst in self._lists]
-        if self._code_blob is not None:
+        # cluster_of stays universe-sized; only locally-held rows are known
+        # (a shard leaves its unowned slots at 0, same as the RIDX loader)
+        ext = np.zeros(count, np.int64)
+        ext[new_ids - base] = assign_new
+        self.cluster_of = np.concatenate(
+            [np.asarray(self.cluster_of, np.int64), ext])
+        self._ids.append(rel_lists, base, count)
+        if self._code_blobs is not None:
+            self._code_blobs.append(self._polya.encode(epoch_codes))
+        self.n = base + count
+        # appends never alias warm (epoch, cluster) cache keys, so no cache
+        # invalidation here; compaction renumbers epochs and must clear
+        if self.max_epochs is not None and self._ids.n_epochs > self.max_epochs:
+            self.compact()
+        return self
+
+    @property
+    def n_epochs(self) -> int:
+        return self._ids.n_epochs
+
+    def compact(self) -> "IVFIndex":
+        """Fold every epoch into one ``[0, n)`` blob set.
+
+        Re-encodes all ids (and Pólya codes) against the single global
+        universe — the paper's compression rates again, at O(n) cost.
+        Run it off the ingest path (``max_epochs`` threshold, or a
+        service's background tick) to bound the epoch bpv overhead.
+        """
+        self._ids.compact(self._lists, self.n)
+        if self._code_blobs is not None:
             per_cluster = [self.codes[self.offsets[k]: self.offsets[k + 1]]
                            for k in range(self.nlist)]
-            self._code_blob = self._polya.encode(per_cluster)
+            self._code_blobs = [self._polya.encode(per_cluster)]
+        # epoch indices restarted at 0: stale (epoch, cluster) keys would alias
         self.decoded_cache.clear()
         return self
 
     # -- sizes -------------------------------------------------------------------
     def id_bits(self) -> int:
-        if self._wt is not None:
-            return self._wt.size_bits
-        return int(sum(self._codec.size_bits(b) for b in self._blobs))
+        return self._ids.id_bits()
 
     def bits_per_id(self) -> float:
         return self.id_bits() / self.n
 
     def code_bits_per_element(self) -> float:
-        if self._code_blob is None:
+        if self._code_blobs is None:
             return 8.0
-        return self._polya.bits_per_element(self._code_blob)
+        bits = sum(int(b["bits"]) for b in self._code_blobs)
+        elems = sum(int(sum(b["sizes"])) * int(b["m"])
+                    for b in self._code_blobs)
+        return bits / max(1, elems)
+
+    @property
+    def _code_blob(self):
+        # legacy single-blob view (v1 RIVF container): exact for one epoch,
+        # re-encoded from the global grouping otherwise
+        if self._code_blobs is None:
+            return None
+        if len(self._code_blobs) == 1:
+            return self._code_blobs[0]
+        per_cluster = [self.codes[self.offsets[k]: self.offsets[k + 1]]
+                       for k in range(self.nlist)]
+        return self._polya.encode(per_cluster)
 
     # -- id resolution (the §4.1 trick) --------------------------------------------
     def resolve_ids(self, clusters: np.ndarray, offsets: np.ndarray) -> np.ndarray:
@@ -190,9 +244,10 @@ class IVFIndex:
 
         Note: lists were encoded SORTED; the scanner's offsets refer to
         storage order, so build/searching keeps storage order == sorted
-        order (ids within a cluster are sorted by construction here).
-        Grouped one-pass resolution; stream codecs decode each distinct
-        cluster at most once per call through the index's LRU cache.
+        order (ids within a cluster are sorted by construction here, and
+        epoch concatenation preserves it).  Grouped one-pass resolution;
+        stream codecs decode each distinct (epoch, cluster) at most once
+        per call through the index's cache.
         """
         t0 = time.perf_counter()
         out = resolve_ids_batch(self, clusters, offsets)

@@ -49,7 +49,9 @@ __all__ = [
     "score_rows_flat",
     "resolve_ids_batch",
     "rescore_eps",
+    "pack_merge_keys",
     "DecodedListCache",
+    "CacheOwnerMixin",
 ]
 
 # extra short-list entries re-scored exactly: kernel scoring only has to get
@@ -106,57 +108,157 @@ def rescore_eps(d: int, bound: float, qn: float, factor: float = 16.0) -> float:
 # ---------------------------------------------------------------------------
 
 class DecodedListCache:
-    """Byte-budgeted LRU over decoded id lists.
+    """Byte-budgeted cache over decoded id lists, LRU or 2Q.
 
     ``resolve_ids`` used to rebuild its decode cache per call; this one
     lives on the index, so a warm serving loop decodes each hot cluster
     once, not once per request batch.
+
+    ``policy="lru"`` (default) is plain recency eviction.  ``policy="2q"``
+    is a segmented LRU: first touch lands an entry in a *probation*
+    segment, a second touch promotes it to a *protected* segment (capped
+    at ``HOT_FRACTION`` of the budget, demoting its own LRU tail back to
+    probation), and eviction always drains probation first — so a scan
+    over many cold clusters can no longer flush the clusters that skewed
+    query traffic keeps hot.
+
+    Keys are any hashables: the IVF path uses ``(epoch, cluster)`` pairs,
+    the graph path uses node ids — appends create fresh keys and never
+    alias warm ones, so ingest needs no cache invalidation at all (only
+    compaction, which renumbers epochs, calls :meth:`clear`).
     """
 
-    def __init__(self, max_bytes: int = 64 << 20):
+    HOT_FRACTION = 0.75
+
+    def __init__(self, max_bytes: int = 64 << 20, policy: str = "lru"):
+        if policy not in ("lru", "2q"):
+            raise ValueError(f"unknown cache policy {policy!r} "
+                             "(options: lru, 2q)")
         self.max_bytes = int(max_bytes)
-        self._lists: "OrderedDict[int, np.ndarray]" = OrderedDict()
+        self.policy = policy
+        self._lists: "OrderedDict[object, np.ndarray]" = OrderedDict()
+        self._hot: "OrderedDict[object, np.ndarray]" = OrderedDict()
+        self._hot_bytes = 0
         self.bytes = 0
         self.hits = 0
         self.decodes = 0
         self.evictions = 0
+        self.promotions = 0
 
-    def get(self, key: int, decode: Callable[[], np.ndarray]) -> np.ndarray:
+    def __len__(self) -> int:
+        return len(self._lists) + len(self._hot)
+
+    def _evict(self) -> None:
+        # probation (or the sole LRU segment) drains first; the protected
+        # segment is only touched once probation is empty
+        while self.bytes > self.max_bytes and len(self) > 1:
+            if self._lists:
+                _, old = self._lists.popitem(last=False)
+            else:
+                _, old = self._hot.popitem(last=False)
+                self._hot_bytes -= old.nbytes
+            self.bytes -= old.nbytes
+            self.evictions += 1
+
+    def _shrink_hot(self) -> None:
+        cap = self.HOT_FRACTION * self.max_bytes
+        while self._hot_bytes > cap and len(self._hot) > 1:
+            key, old = self._hot.popitem(last=False)
+            self._hot_bytes -= old.nbytes
+            self._lists[key] = old          # demote to probation MRU
+
+    def get(self, key, decode: Callable[[], np.ndarray]) -> np.ndarray:
+        hot = self._hot.get(key)
+        if hot is not None:
+            self._hot.move_to_end(key)
+            self.hits += 1
+            return hot
         hit = self._lists.get(key)
         if hit is not None:
-            self._lists.move_to_end(key)
             self.hits += 1
+            if self.policy == "2q":
+                del self._lists[key]        # second touch: promote
+                self._hot[key] = hit
+                self._hot_bytes += hit.nbytes
+                self.promotions += 1
+                self._shrink_hot()
+            else:
+                self._lists.move_to_end(key)
             return hit
         arr = np.asarray(decode())
         self.decodes += 1
         self._lists[key] = arr
         self.bytes += arr.nbytes
-        while self.bytes > self.max_bytes and len(self._lists) > 1:
-            _, old = self._lists.popitem(last=False)
-            self.bytes -= old.nbytes
-            self.evictions += 1
+        self._evict()
         return arr
+
+    def invalidate(self, key) -> None:
+        """Drop one entry (not counted as an eviction); no-op if absent."""
+        old = self._lists.pop(key, None)
+        if old is None:
+            old = self._hot.pop(key, None)
+            if old is not None:
+                self._hot_bytes -= old.nbytes
+        if old is not None:
+            self.bytes -= old.nbytes
 
     def clear(self) -> None:
         self._lists.clear()
+        self._hot.clear()
+        self._hot_bytes = 0
         self.bytes = 0
 
     def set_budget(self, max_bytes: int) -> None:
-        """Change the byte budget, evicting LRU entries down to it."""
+        """Change the byte budget, evicting entries down to it."""
         self.max_bytes = int(max_bytes)
-        while self.bytes > self.max_bytes and len(self._lists) > 1:
-            _, old = self._lists.popitem(last=False)
-            self.bytes -= old.nbytes
-            self.evictions += 1
+        self._evict()
+        if self.policy == "2q":
+            self._shrink_hot()
 
     def stats(self) -> Dict[str, int]:
-        return {
-            "entries": len(self._lists),
+        out = {
+            "entries": len(self),
             "bytes": self.bytes,
             "hits": self.hits,
             "decodes": self.decodes,
             "evictions": self.evictions,
         }
+        if self.policy == "2q":
+            out["promotions"] = self.promotions
+            out["protected_entries"] = len(self._hot)
+        return out
+
+
+class CacheOwnerMixin:
+    """Cache plumbing shared by ``IVFIndex`` and ``GraphIndex``.
+
+    Builds the :class:`DecodedListCache` from the owner's declared
+    ``cache_bytes`` / ``cache_policy`` fields, and re-attaches one on
+    unpickle (``__setstate__``) so indexes pickled before the cache —
+    or before the ``cache_policy`` field — existed keep working without
+    per-access ``hasattr`` checks.
+    """
+
+    def _new_cache(self) -> DecodedListCache:
+        budget = getattr(self, "cache_bytes", None)
+        policy = getattr(self, "cache_policy", None) or "lru"
+        if budget is not None:
+            return DecodedListCache(max_bytes=int(budget), policy=policy)
+        return DecodedListCache(policy=policy)
+
+    @property
+    def decoded_cache(self) -> DecodedListCache:
+        return self._decoded_cache
+
+    def __getstate__(self) -> dict:
+        state = dict(self.__dict__)
+        state.pop("_decoded_cache", None)   # transient derived state
+        return state
+
+    def __setstate__(self, state: dict) -> None:
+        self.__dict__.update(state)
+        if "_decoded_cache" not in self.__dict__:
+            self._decoded_cache = self._new_cache()
 
 
 # ---------------------------------------------------------------------------
@@ -167,34 +269,14 @@ def resolve_ids_batch(index, clusters: np.ndarray,
                       offsets: np.ndarray) -> np.ndarray:
     """Resolve all ``(cluster, offset)`` pairs in one pass.
 
-    Pairs are grouped by cluster: stream codecs (ROC/gap-ANS) decode each
-    distinct cluster at most once per call through the index's
-    :class:`DecodedListCache`; EF/compact/uncompressed use random access;
-    wavelet trees use ``select``.
+    Offsets are positions in the logical (all-epochs) cluster list; the
+    index's :class:`repro.core.epoch.EpochStore` routes each pair to its
+    epoch and resolves it there — stream codecs (ROC/gap-ANS) decode each
+    distinct ``(epoch, cluster)`` at most once per call through the
+    index's :class:`DecodedListCache`; EF/compact/uncompressed use random
+    access; wavelet trees use ``select``.
     """
-    clusters = np.asarray(clusters, dtype=np.int64)
-    offsets = np.asarray(offsets, dtype=np.int64)
-    out = np.empty(clusters.shape[0], dtype=np.int64)
-    if clusters.shape[0] == 0:
-        return out
-    if index._wt is not None:
-        for i in range(clusters.shape[0]):
-            out[i] = index._wt.select(int(clusters[i]), int(offsets[i]))
-        return out
-    codec = index._codec
-    cache = index.decoded_cache
-    order = np.argsort(clusters, kind="stable")
-    bounds = np.flatnonzero(np.diff(clusters[order])) + 1
-    for grp in np.split(order, bounds):
-        k = int(clusters[grp[0]])
-        blob = index._blobs[k]
-        offs = offsets[grp]
-        gathered = codec.gather(blob, offs)
-        if gathered is None:
-            ids = cache.get(k, lambda: codec.decode(blob, index.n))
-            gathered = ids[offs]
-        out[grp] = gathered
-    return out
+    return index._ids.resolve(clusters, offsets, index.decoded_cache)
 
 
 # ---------------------------------------------------------------------------
@@ -292,6 +374,34 @@ def _spans_concat(starts: np.ndarray, lens: np.ndarray) -> np.ndarray:
 
 
 MERGE_KEY_PAD = np.uint64(np.iinfo(np.uint64).max)
+
+# merge-key layout: (probe_rank << 40) | in-cluster offset.  40 offset bits
+# cap any single cluster at 2^40 rows; the remaining 24 rank bits cap nprobe
+# at 2^24.  Both are astronomically past realistic shapes, but a silent
+# wrap would corrupt the sharded merge order, so packing checks explicitly.
+MERGE_KEY_OFFSET_BITS = 40
+MERGE_KEY_RANK_BITS = 64 - MERGE_KEY_OFFSET_BITS
+
+
+def pack_merge_keys(ranks: np.ndarray, offs: np.ndarray) -> np.ndarray:
+    """``(probe_rank << 40) | offset`` uint64 tie-order keys, overflow-checked.
+
+    Raises ``OverflowError`` instead of silently wrapping: an offset at or
+    above ``2^40`` would leak into the rank field and a rank at or above
+    ``2^24`` would wrap off the top, either of which reorders the sharded
+    router's ``(dist, key)`` merge.
+    """
+    ranks = np.asarray(ranks, np.uint64)
+    offs = np.asarray(offs, np.uint64)
+    if offs.size and int(offs.max()) >= (1 << MERGE_KEY_OFFSET_BITS):
+        raise OverflowError(
+            f"in-cluster offset {int(offs.max())} needs more than "
+            f"{MERGE_KEY_OFFSET_BITS} merge-key bits")
+    if ranks.size and int(ranks.max()) >= (1 << MERGE_KEY_RANK_BITS):
+        raise OverflowError(
+            f"probe rank {int(ranks.max())} needs more than "
+            f"{MERGE_KEY_RANK_BITS} merge-key bits")
+    return (ranks << np.uint64(MERGE_KEY_OFFSET_BITS)) | offs
 
 
 def batched_search(index, queries: np.ndarray, nprobe: int = 16,
@@ -465,9 +575,8 @@ def batched_search(index, queries: np.ndarray, nprobe: int = 16,
             res_cluster.append(uniq[span])
             res_offset.append(p - arena_start[span])
             if with_keys:
-                res_key.append(
-                    (rank_of[i, uniq[span]] << np.uint64(40))
-                    | (p - arena_start[span]).astype(np.uint64))
+                res_key.append(pack_merge_keys(rank_of[i, uniq[span]],
+                                               p - arena_start[span]))
 
     # --- late id resolution: one pass over every winning pair --------------
     t_res = time.perf_counter()

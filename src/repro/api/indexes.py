@@ -37,6 +37,13 @@ def _cache_bytes(spec: IndexSpec) -> Optional[int]:
     return int(spec.cache_mb * (1 << 20))
 
 
+def _ingest_fields(spec: IndexSpec) -> dict:
+    """Constructor kwargs shared by the IVF and graph inner indexes."""
+    return dict(cache_bytes=_cache_bytes(spec),
+                cache_policy=spec.cache_policy or "lru",
+                max_epochs=spec.max_epochs)
+
+
 class _SpecMixin:
     index_spec: IndexSpec
 
@@ -80,6 +87,33 @@ class FlatIndex(_SpecMixin):
             x = x[None]
         self.vecs = np.concatenate([self.vecs, x], axis=0)
         self.n = self.vecs.shape[0]
+        return self
+
+    def append_rows(self, x: np.ndarray,
+                    global_ids: np.ndarray) -> "FlatIndex":
+        """Routed ingest for a planner-made shard: append the owned rows
+        and extend ``id_map``.  New global ids exceed every existing one,
+        so ascending order (the sharded tie-break invariant) is kept."""
+        x = np.asarray(x, np.float32)
+        if x.ndim == 1:
+            x = x[None]
+        global_ids = np.asarray(global_ids, np.int64)
+        if x.shape[0] != global_ids.shape[0]:
+            raise ValueError("one global id per appended row")
+        if x.shape[0] == 0:
+            return self
+        if self.id_map is None:
+            if np.any(global_ids != self.n + np.arange(global_ids.size)):
+                raise ValueError("unsharded Flat ingest must be dense "
+                                 "(ids n..n+m-1); use add()")
+            self.vecs = np.concatenate([self.vecs, x], axis=0)
+            self.n = self.vecs.shape[0]
+            return self
+        if self.id_map.size and int(global_ids[0]) <= int(self.id_map[-1]):
+            raise ValueError("appended global ids must exceed existing ones")
+        self.vecs = np.concatenate([self.vecs, x], axis=0)
+        self.n = self.vecs.shape[0]
+        self.id_map = np.concatenate([self.id_map, global_ids])
         return self
 
     def search(self, queries: np.ndarray, k: int = 10, **opts):
@@ -130,18 +164,20 @@ class IVFApiIndex(_SpecMixin):
         pq = (ProductQuantizer(m=spec.pq_m, bits=spec.pq_bits)
               if spec.pq_m else None)
         self.ivf = IVFIndex(nlist=spec.nlist, id_codec=spec.ids, pq=pq,
-                            code_codec=spec.codes,
-                            cache_bytes=_cache_bytes(spec))
+                            code_codec=spec.codes, **_ingest_fields(spec))
 
     @classmethod
     def from_built(cls, ivf: IVFIndex,
                    spec: Optional[IndexSpec] = None) -> "IVFApiIndex":
         self = cls.__new__(cls)
+        policy = getattr(ivf, "cache_policy", None)
         self.index_spec = spec or IndexSpec(
             kind="ivf", nlist=ivf.nlist, ids=ivf.id_codec,
             pq_m=ivf.pq.m if ivf.pq else 0, codes=ivf.code_codec,
             cache_mb=(ivf.cache_bytes / (1 << 20)
-                      if getattr(ivf, "cache_bytes", None) else None))
+                      if getattr(ivf, "cache_bytes", None) else None),
+            cache_policy=None if policy in (None, "lru") else policy,
+            max_epochs=getattr(ivf, "max_epochs", None))
         self.ivf = ivf
         return self
 
@@ -158,6 +194,28 @@ class IVFApiIndex(_SpecMixin):
     def add(self, x: np.ndarray) -> "IVFApiIndex":
         self.ivf.add(x)
         return self
+
+    def append_rows(self, x: np.ndarray, global_ids: np.ndarray,
+                    count: Optional[int] = None) -> "IVFApiIndex":
+        """Routed ingest: seal the epoch holding these (possibly partial)
+        rows.  A cluster shard passes only its owned rows plus the global
+        epoch ``count`` so epoch boundaries stay universe-wide; see
+        :meth:`IVFIndex.append_epoch`."""
+        global_ids = np.asarray(global_ids, np.int64)
+        if count is None:
+            count = (int(global_ids.max()) + 1 - self.ivf.n
+                     if global_ids.size else 0)
+        if count > 0:
+            self.ivf.append_epoch(x, global_ids, count)
+        return self
+
+    def compact(self) -> "IVFApiIndex":
+        self.ivf.compact()
+        return self
+
+    @property
+    def n_epochs(self) -> int:
+        return self.ivf.n_epochs
 
     def search(self, queries: np.ndarray, k: int = 10, nprobe: int = 16,
                engine: Optional[str] = None, query_block: int = 64,
@@ -182,6 +240,7 @@ class IVFApiIndex(_SpecMixin):
         cache = idx.decoded_cache.stats()
         return {
             "n": n,
+            "epochs": float(idx.n_epochs),
             "ids_bytes": id_bytes,
             "ids_bytes_unc64": 8.0 * n,
             "ids_bytes_compact": float(np.ceil(np.log2(max(2, idx.n)))) * n / 8.0,
@@ -199,8 +258,7 @@ class GraphApiIndex(_SpecMixin):
 
     def __init__(self, spec: IndexSpec):
         self.index_spec = spec
-        self.graph = GraphIndex(id_codec=spec.ids,
-                                cache_bytes=_cache_bytes(spec))
+        self.graph = GraphIndex(id_codec=spec.ids, **_ingest_fields(spec))
 
     @classmethod
     def from_built(cls, graph: GraphIndex,
@@ -230,9 +288,44 @@ class GraphApiIndex(_SpecMixin):
     def add(self, x: np.ndarray) -> "GraphApiIndex":
         if getattr(self.graph, "id_map", None) is not None:
             raise ValueError("cannot add() to a planner-made graph shard: "
-                             "its global-id mapping is fixed by the plan")
+                             "its global-id mapping is fixed by the plan; "
+                             "route ingest through append_rows()")
         self.graph.add(x, r=self.index_spec.degree)
         return self
+
+    def append_rows(self, x: np.ndarray,
+                    global_ids: np.ndarray) -> "GraphApiIndex":
+        """Routed ingest for a planner-made shard: insert the rows this
+        shard owns and extend ``id_map``.  New global ids exceed every
+        existing one, so the map stays ascending and the sharded-merge
+        tie order stays aligned with the monolithic one."""
+        x = np.asarray(x, np.float32).reshape(-1, self.graph.x.shape[1])
+        global_ids = np.asarray(global_ids, np.int64)
+        if x.shape[0] != global_ids.shape[0]:
+            raise ValueError("one global id per appended row")
+        if x.shape[0] == 0:
+            return self
+        id_map = getattr(self.graph, "id_map", None)
+        if id_map is None:
+            if np.any(global_ids != self.graph.n
+                      + np.arange(global_ids.size)):
+                raise ValueError("unsharded graph ingest must be dense "
+                                 "(ids n..n+m-1); use add()")
+            self.graph.add(x, r=self.index_spec.degree)
+            return self
+        if global_ids.size and int(global_ids[0]) <= int(id_map[-1]):
+            raise ValueError("appended global ids must exceed existing ones")
+        self.graph.add(x, r=self.index_spec.degree)
+        self.graph.id_map = np.concatenate([id_map, global_ids])
+        return self
+
+    def compact(self) -> "GraphApiIndex":
+        self.graph.compact()
+        return self
+
+    @property
+    def n_epochs(self) -> int:
+        return self.graph.n_epochs
 
     def search(self, queries: np.ndarray, k: int = 10,
                ef: Optional[int] = None, engine: Optional[str] = None,
@@ -258,6 +351,7 @@ class GraphApiIndex(_SpecMixin):
         cache = g.decoded_cache.stats()
         return {
             "n": g.n,
+            "epochs": float(g.n_epochs),
             "edges": edges,
             "ids_bytes": id_bytes + map_bytes,
             "ids_bytes_unc64": 8.0 * edges + map_bytes,

@@ -7,16 +7,20 @@ codec × structure matrix from a single ``--spec`` flag::
     spec   := struct ("," pq)? ("," key "=" value)*
     struct := "Flat" | "IVF" <nlist> | "NSG" <R> | "HNSW" <M>
     pq     := "PQ" <m> ("x" <bits>)?          # IVF only
-    keys   := ids      = unc64|unc32|compact|ef|roc|gap_ans|wt|wt1
-              codes    = polya                # IVF+PQ only
-              cache_mb = <float>              # DecodedListCache budget
-              engine   = auto|xla|pallas     # scan backend (IVF + graph)
+    keys   := ids          = unc64|unc32|compact|ef|roc|gap_ans|wt|wt1
+              codes        = polya            # IVF+PQ only
+              cache_mb     = <float>          # DecodedListCache budget
+              cache_policy = lru|2q           # DecodedListCache eviction
+              max_epochs   = <int>            # auto-compact ingest threshold
+              engine       = auto|xla|pallas  # scan backend (IVF + graph)
 
 ``ids=wt|wt1`` (the joint wavelet tree) applies only to IVF — friend
-lists are not a partition.  :func:`parse_spec` accepts options in any
-order; :meth:`IndexSpec.__str__` emits the canonical form (struct, PQ,
-ids, codes, cache_mb, engine) so canonical strings round-trip exactly:
-``str(parse_spec(s)) == s``.
+lists are not a partition.  ``cache_policy``/``max_epochs`` apply to the
+structures that own a decode cache / take online ingest (IVF + graph,
+not Flat).  :func:`parse_spec` accepts options in any order;
+:meth:`IndexSpec.__str__` emits the canonical form (struct, PQ, ids,
+codes, cache_mb, cache_policy, max_epochs, engine) so canonical strings
+round-trip exactly: ``str(parse_spec(s)) == s``.
 """
 
 from __future__ import annotations
@@ -32,6 +36,7 @@ __all__ = ["IndexSpec", "parse_spec"]
 _WT_NAMES = ("wt", "wt1")
 _ID_NAMES = tuple(CODEC_NAMES) + _WT_NAMES
 _ENGINES = ("auto", "xla", "pallas")
+_CACHE_POLICIES = ("lru", "2q")
 _STRUCT_RE = re.compile(r"^(Flat|IVF|NSG|HNSW)(\d+)?$")
 _PQ_RE = re.compile(r"^PQ(\d+)(?:x(\d+))?$")
 
@@ -48,6 +53,8 @@ class IndexSpec:
     ids: str = "roc"                  # id codec ("" for Flat)
     codes: Optional[str] = None       # None | "polya"
     cache_mb: Optional[float] = None  # DecodedListCache budget
+    cache_policy: Optional[str] = None  # None (= "lru") | "lru" | "2q"
+    max_epochs: Optional[int] = None  # compact once ingest exceeds this
     engine: Optional[str] = None      # scan backend, IVF + graph (None = "auto")
 
     def __post_init__(self) -> None:
@@ -87,6 +94,20 @@ class IndexSpec:
                 f"unknown engine {self.engine!r}; options: {_ENGINES}")
         if self.cache_mb is not None and self.cache_mb <= 0:
             raise ValueError("cache_mb must be positive")
+        if self.cache_policy is not None:
+            if self.cache_policy not in _CACHE_POLICIES:
+                raise ValueError(f"unknown cache_policy "
+                                 f"{self.cache_policy!r}; "
+                                 f"options: {_CACHE_POLICIES}")
+            if self.kind == "flat":
+                raise ValueError("Flat has no decode cache "
+                                 "(cache_policy does not apply)")
+        if self.max_epochs is not None:
+            if self.max_epochs <= 0:
+                raise ValueError("max_epochs must be positive")
+            if self.kind == "flat":
+                raise ValueError("Flat ingest has no epochs "
+                                 "(max_epochs does not apply)")
 
     def __str__(self) -> str:
         if self.kind == "flat":
@@ -104,6 +125,10 @@ class IndexSpec:
         if self.cache_mb is not None:
             mb = self.cache_mb
             parts.append(f"cache_mb={int(mb) if mb == int(mb) else mb}")
+        if self.cache_policy is not None:
+            parts.append(f"cache_policy={self.cache_policy}")
+        if self.max_epochs is not None:
+            parts.append(f"max_epochs={self.max_epochs}")
         if self.engine is not None:
             parts.append(f"engine={self.engine}")
         return ",".join(parts)
@@ -124,7 +149,7 @@ def parse_spec(spec: str) -> IndexSpec:
     struct, num = m.group(1), int(m.group(2) or 0)
     kw = dict(kind=struct.lower(), nlist=0, degree=0, pq_m=0, pq_bits=8,
               ids="" if struct == "Flat" else "roc", codes=None,
-              cache_mb=None, engine=None)
+              cache_mb=None, cache_policy=None, max_epochs=None, engine=None)
     if struct == "IVF":
         kw["nlist"] = num
     elif struct in ("NSG", "HNSW"):
@@ -154,9 +179,14 @@ def parse_spec(spec: str) -> IndexSpec:
             kw["codes"] = val
         elif key == "cache_mb":
             kw["cache_mb"] = float(val)
+        elif key == "cache_policy":
+            kw["cache_policy"] = val
+        elif key == "max_epochs":
+            kw["max_epochs"] = int(val)
         elif key == "engine":
             kw["engine"] = val
         else:
             raise ValueError(f"unknown spec option {key!r} "
-                             "(known: ids, codes, cache_mb, engine)")
+                             "(known: ids, codes, cache_mb, cache_policy, "
+                             "max_epochs, engine)")
     return IndexSpec(**kw)

@@ -43,7 +43,7 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
-__all__ = ["AnnService", "BatchPolicy", "Ticket"]
+__all__ = ["AnnService", "AddTicket", "BatchPolicy", "Ticket"]
 
 
 @dataclasses.dataclass
@@ -71,6 +71,21 @@ class Ticket:
     search_s: float = 0.0          # batch search wall time (shared)
     latency_s: float = 0.0         # submit -> results ready (wait + search)
     keys: Optional[np.ndarray] = None  # stable-merge keys (with_keys searches)
+
+
+@dataclasses.dataclass
+class AddTicket:
+    """One ingest request's handle; filled in when its batch is applied."""
+
+    request_id: int
+    n_rows: int
+    enqueued_at: float
+    done: bool = False
+    ids: Optional[np.ndarray] = None   # global ids assigned to the rows
+    batch_id: int = -1
+    batch_size: int = 0                # total rows in the applied batch
+    wait_s: float = 0.0
+    apply_s: float = 0.0               # batch apply wall time (shared)
 
 
 class AnnService:
@@ -105,6 +120,8 @@ class AnnService:
             inner.decoded_cache.set_budget(int(cache_mb * (1 << 20)))
         self._pending: List[Ticket] = []
         self._pending_q: List[np.ndarray] = []
+        self._pending_add: List[AddTicket] = []
+        self._pending_add_x: List[np.ndarray] = []
         self._next_id = 0
         self.reset_stats()
 
@@ -113,6 +130,10 @@ class AnnService:
         self.requests = 0
         self.queries = 0
         self.batches = 0
+        self.adds = 0
+        self.add_rows = 0
+        self.add_batches = 0
+        self.add_s = 0.0
         self.ndis = 0
         self.decodes = 0
         self.search_s = 0.0
@@ -142,17 +163,84 @@ class AnnService:
             self.tick()
         return t
 
+    # -- ingest path ---------------------------------------------------------
+    def submit_add(self, x: np.ndarray) -> AddTicket:
+        """Enqueue rows for ingest (``(m, d)`` or ``(d,)``).
+
+        Ingest micro-batches under the same policy as queries: appended
+        rows are sealed into ONE epoch per flush (one entropy-coding pass
+        per batch, not per request).  Any query flush applies pending adds
+        first, so a submit -> search sequence always sees its own rows.
+        """
+        x = np.asarray(x, np.float32)
+        if x.ndim == 1:
+            x = x[None]
+        t = AddTicket(request_id=self._next_id, n_rows=x.shape[0],
+                      enqueued_at=self.clock())
+        self._next_id += 1
+        self._pending_add.append(t)
+        self._pending_add_x.append(x)
+        self.adds += 1
+        self.add_rows += x.shape[0]
+        if self.pending_adds() >= self.policy.max_batch:
+            self.flush_adds()
+        else:
+            self.tick()
+        return t
+
+    def flush_adds(self) -> List[AddTicket]:
+        """Apply every pending add as one epoch; complete the tickets."""
+        if not self._pending_add:
+            return []
+        tickets, self._pending_add = self._pending_add, []
+        xs, self._pending_add_x = self._pending_add_x, []
+        now = self.clock()
+        x = np.concatenate(xs, axis=0)
+        base = int(self.index.n)
+        t0 = time.perf_counter()
+        self.index.add(x)
+        apply_s = time.perf_counter() - t0
+        self.add_batches += 1
+        self.add_s += apply_s
+        row = 0
+        for t in tickets:
+            t.ids = np.arange(base + row, base + row + t.n_rows, dtype=np.int64)
+            row += t.n_rows
+            t.done = True
+            t.batch_id = self.add_batches - 1
+            t.batch_size = x.shape[0]
+            t.wait_s = max(0.0, now - t.enqueued_at)
+            t.apply_s = apply_s
+        return tickets
+
+    def add(self, x: np.ndarray) -> AddTicket:
+        """Synchronous ingest convenience: submit + immediate apply."""
+        t = self.submit_add(x)
+        if not t.done:
+            self.flush_adds()
+        return t
+
+    def pending_adds(self) -> int:
+        return sum(t.n_rows for t in self._pending_add)
+
     def tick(self) -> bool:
         """Flush if the oldest pending request exceeded the wait budget."""
+        fired = False
+        if self._pending_add and (self.clock() - self._pending_add[0].enqueued_at
+                                  >= self.policy.max_wait_s):
+            self.flush_adds()
+            fired = True
         if not self._pending:
-            return False
+            return fired
         if self.clock() - self._pending[0].enqueued_at >= self.policy.max_wait_s:
             self.flush()
             return True
-        return False
+        return fired
 
     def flush(self) -> List[Ticket]:
         """Run one batched search over everything pending; complete tickets."""
+        # read-your-writes: rows submitted before these queries must be live
+        self.flush_adds()
         if not self._pending:
             return []
         tickets, self._pending = self._pending, []
@@ -226,6 +314,10 @@ class AnnService:
             "requests": self.requests,
             "queries": self.queries,
             "batches": self.batches,
+            "adds": self.adds,
+            "add_rows": self.add_rows,
+            "add_batches": self.add_batches,
+            "add_s": self.add_s,
             "mean_batch": float(bs.mean()) if bs.size else 0.0,
             "max_batch": float(bs.max()) if bs.size else 0.0,
             "mean_wait_s": float(ws.mean()) if ws.size else 0.0,

@@ -4,7 +4,7 @@ The paper's compression argument is a per-machine capacity argument —
 compressed ids mean more of the database fits in one process.  Past one
 machine the database must be partitioned, and the ``repro.api`` seam
 makes the shard unit trivial: each shard is itself a factory-spec index,
-serialized as a standalone RIDX v2 blob, described by one JSON manifest.
+serialized as a standalone RIDX blob, described by one JSON manifest.
 
 Partitioning schemes (all deterministic):
 
@@ -43,10 +43,8 @@ import numpy as np
 from ..ann.graph import GraphIndex, build_hnsw, build_nsg
 from ..ann.ivf import IVFIndex
 from ..ann.scan import _spans_concat
-from ..core.codecs import get_codec
 from ..core.polya import PolyaCodec
-from ..core.wavelet_tree import WaveletTree
-from ..api.container import load_index, save_index, wt_sequence
+from ..api.container import load_index, save_index
 from ..api.indexes import (FlatIndex, GraphApiIndex, IVFApiIndex,
                            as_api_index)
 from ..api.spec import parse_spec
@@ -111,8 +109,36 @@ class ShardPlan:
             "shards": [s.to_json() for s in self.shards],
         }
 
+    def cluster_owner(self) -> np.ndarray:
+        """IVF plans: owner shard id per cluster (``(nlist,)`` int64).
+
+        The routing table for online ingest — a new vector goes to the
+        shard owning its nearest centroid's cluster."""
+        if self.kind != "ivf":
+            raise ValueError("cluster_owner() applies to IVF plans only")
+        nlist = parse_spec(self.source_spec).nlist
+        owner = np.full(nlist, -1, np.int64)
+        for info in self.shards:
+            c = info.clusters
+            if c is None:
+                continue
+            if self.by == "range":
+                owner[int(c[0]):int(c[1])] = info.shard_id
+            else:
+                owner[np.asarray(c, np.int64)] = info.shard_id
+        return owner
+
+    def id_owner(self, ids: np.ndarray) -> np.ndarray:
+        """Flat/graph hash plans: owner shard per (new) global id."""
+        if self.kind == "ivf":
+            raise ValueError("IVF ingest routes by cluster_owner()")
+        if self.by != "hash":
+            raise ValueError(
+                f"by={self.by!r} plans have no rule for unseen ids")
+        return _hash_owner(np.asarray(ids, np.int64), self.nshards)
+
     def save(self, out_dir) -> Path:
-        """Write per-shard RIDX v2 artifacts + ``shards.json``; returns
+        """Write per-shard RIDX artifacts + ``shards.json``; returns
         the manifest path."""
         out = Path(out_dir)
         out.mkdir(parents=True, exist_ok=True)
@@ -153,16 +179,17 @@ def _cache_bytes(spec) -> Optional[int]:
 
 def _split_ivf(src: IVFIndex, owner: np.ndarray,
                nshards: int) -> List[IVFIndex]:
-    """Cluster-granular split; every shard keeps the full quantizer and
-    the global id universe (see module doc for why that buys bit-parity)."""
+    """Cluster-granular split; every shard keeps the full quantizer, the
+    global id universe AND the global epoch boundaries (see module doc
+    and repro.core.epoch for why that buys bit-parity)."""
     out = []
     starts = src.offsets[:-1]
-    is_wt = src.id_codec in ("wt", "wt1")
-    codec = None if is_wt else get_codec(src.id_codec)
     for s in range(nshards):
         mask = owner == s
         sh = IVFIndex(nlist=src.nlist, id_codec=src.id_codec, pq=src.pq,
-                      code_codec=src.code_codec, cache_bytes=src.cache_bytes)
+                      code_codec=src.code_codec, cache_bytes=src.cache_bytes,
+                      cache_policy=src.cache_policy,
+                      max_epochs=src.max_epochs)
         sh.n, sh.d = src.n, src.d
         sh.centroids = src.centroids          # shared coarse quantizer
         sh.cluster_of = src.cluster_of
@@ -176,26 +203,22 @@ def _split_ivf(src: IVFIndex, owner: np.ndarray,
             sh.codes, sh.vecs = src.codes[rows], None
         else:
             sh.codes, sh.vecs = None, src.vecs[rows]
-        if is_wt:
-            seq, nsyms = wt_sequence(sh._lists, sh.n, sh.nlist)
-            sh._wt = WaveletTree.build(seq, nsyms,
-                                       compressed=(src.id_codec == "wt1"))
-            sh._blobs = None
-        else:
-            sh._wt = None
-            sh._codec = codec
-            empty = codec.encode(np.zeros(0, np.int64), sh.n)
-            # owned blobs are the monolithic ones verbatim (same list, same
-            # universe -> same bytes); unowned clusters hold an empty stream
-            sh._blobs = [src._blobs[k] if mask[k] else empty
-                         for k in range(src.nlist)]
-        if getattr(src, "_code_blob", None) is not None:
-            per = [sh.codes[sh.offsets[k]: sh.offsets[k + 1]]
-                   for k in range(sh.nlist)]
+        # owned epoch blobs are the monolithic ones verbatim (same relative
+        # list, same universe -> same bytes); unowned clusters empty
+        sh._ids = src._ids.split(mask, src._lists)
+        if getattr(src, "_code_blobs", None) is not None:
+            # per-epoch polya over the owned rows (cluster rows are stored
+            # epoch-ascending, so each epoch is a contiguous sub-span)
+            cum = sh._ids._cum
             sh._polya = PolyaCodec()
-            sh._code_blob = sh._polya.encode(per)
+            sh._code_blobs = [
+                sh._polya.encode(
+                    [sh.codes[sh.offsets[k] + cum[e, k]:
+                              sh.offsets[k] + cum[e + 1, k]]
+                     for k in range(sh.nlist)])
+                for e in range(sh._ids.n_epochs)]
         else:
-            sh._code_blob = None
+            sh._code_blobs = None
         sh._decoded_cache = sh._new_cache()
         out.append(sh)
     return out
@@ -234,7 +257,9 @@ def _split_graph(src: GraphApiIndex, owner: np.ndarray, nshards: int,
             else:
                 adj = builder(xs, spec.degree, seed=seed)
             sub = GraphIndex(id_codec=spec.ids,
-                             cache_bytes=_cache_bytes(spec)).build(xs, adj)
+                             cache_bytes=_cache_bytes(spec),
+                             cache_policy=spec.cache_policy or "lru",
+                             max_epochs=spec.max_epochs).build(xs, adj)
             sub.id_map = ids
         out.append(GraphApiIndex.from_built(sub, spec))
     return out

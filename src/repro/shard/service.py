@@ -42,7 +42,7 @@ import numpy as np
 
 from ..ann.scan import MERGE_KEY_PAD
 from ..ann.stats import SearchStats, combine_stats
-from ..serve.ann_service import AnnService, BatchPolicy
+from ..serve.ann_service import AddTicket, AnnService, BatchPolicy
 from .faults import FaultPolicy, RetryPolicy, ShardDead
 from .plan import ShardPlan
 
@@ -133,6 +133,10 @@ class ShardedAnnService:
             thread_name_prefix="shard")
         self._pending: List[ShardTicket] = []
         self._pending_q: List[np.ndarray] = []
+        self._pending_add: List[AddTicket] = []
+        self._pending_add_x: List[np.ndarray] = []
+        self._n = int(self.plan.n) if self.plan is not None else 0
+        self._cluster_owner: Optional[np.ndarray] = None
         self._next_id = 0
         self.reset_stats()
 
@@ -150,6 +154,10 @@ class ShardedAnnService:
         self.requests = 0
         self.queries = 0
         self.batches = 0
+        self.adds = 0
+        self.add_rows = 0
+        self.add_batches = 0
+        self.add_s = 0.0
         self.partial_batches = 0
         self.shards_failed = 0
         self.retries = 0
@@ -182,17 +190,119 @@ class ShardedAnnService:
             self.tick()
         return t
 
+    # -- ingest path ---------------------------------------------------------
+    def submit_add(self, x: np.ndarray) -> AddTicket:
+        """Enqueue rows for routed ingest (``(m, d)`` or ``(d,)``).
+
+        Needs a :class:`ShardPlan` (the routing table).  Rows batch under
+        the same micro-batching policy as queries and are applied by
+        :meth:`flush_adds`: IVF plans assign each row to its nearest
+        centroid's cluster and hand it to the shard owning that cluster —
+        every shard seals the epoch with the *global* row count, so epoch
+        boundaries (hence blob bytes) match the monolithic index.  Flat /
+        graph hash plans route by the id-hash rule.  Query flushes apply
+        pending adds first (read-your-writes).
+        """
+        if self.plan is None:
+            raise ValueError("routed ingest needs a ShardPlan "
+                             "(construct the service from a plan)")
+        x = np.asarray(x, np.float32)
+        if x.ndim == 1:
+            x = x[None]
+        t = AddTicket(request_id=self._next_id, n_rows=x.shape[0],
+                      enqueued_at=self.clock())
+        self._next_id += 1
+        self._pending_add.append(t)
+        self._pending_add_x.append(x)
+        self.adds += 1
+        self.add_rows += x.shape[0]
+        if self.pending_adds() >= self.policy.max_batch:
+            self.flush_adds()
+        else:
+            self.tick()
+        return t
+
+    def flush_adds(self) -> List[AddTicket]:
+        """Route every pending add to its owning shard as one epoch."""
+        if not self._pending_add:
+            return []
+        tickets, self._pending_add = self._pending_add, []
+        xs, self._pending_add_x = self._pending_add_x, []
+        now = self.clock()
+        x = np.concatenate(xs, axis=0)
+        m = x.shape[0]
+        base = self._n
+        ids = np.arange(base, base + m, dtype=np.int64)
+        t0 = time.perf_counter()
+        if m:
+            if self.plan.kind == "ivf":
+                from ..ann.kmeans import assign
+
+                if self._cluster_owner is None:
+                    self._cluster_owner = self.plan.cluster_owner()
+                clusters = assign(
+                    x, self._workers[0].index.ivf.centroids)
+                owner = self._cluster_owner[clusters]
+                if np.any(owner < 0):
+                    raise ValueError("plan does not own every cluster")
+                # EVERY shard seals the epoch (global count), rows or not
+                for s in range(self.nshards):
+                    sel = owner == s
+                    with self._locks[s]:
+                        self._workers[s].index.append_rows(
+                            x[sel], ids[sel], count=m)
+            else:
+                owner = self.plan.id_owner(ids)
+                for s in range(self.nshards):
+                    sel = owner == s
+                    if not sel.any():
+                        continue
+                    with self._locks[s]:
+                        self._workers[s].index.append_rows(x[sel], ids[sel])
+            self._n = base + m
+            self.plan.n = self._n
+        apply_s = time.perf_counter() - t0
+        self.add_batches += 1
+        self.add_s += apply_s
+        row = 0
+        for t in tickets:
+            t.ids = ids[row: row + t.n_rows]
+            row += t.n_rows
+            t.done = True
+            t.batch_id = self.add_batches - 1
+            t.batch_size = m
+            t.wait_s = max(0.0, now - t.enqueued_at)
+            t.apply_s = apply_s
+        return tickets
+
+    def add(self, x: np.ndarray) -> AddTicket:
+        """Synchronous ingest convenience: submit + immediate apply."""
+        t = self.submit_add(x)
+        if not t.done:
+            self.flush_adds()
+        return t
+
+    def pending_adds(self) -> int:
+        return sum(t.n_rows for t in self._pending_add)
+
     def tick(self) -> bool:
         """Flush if the oldest pending request exceeded the wait budget."""
+        fired = False
+        if self._pending_add and (self.clock() - self._pending_add[0].enqueued_at
+                                  >= self.policy.max_wait_s):
+            self.flush_adds()
+            fired = True
         if not self._pending:
-            return False
+            return fired
         if self.clock() - self._pending[0].enqueued_at >= self.policy.max_wait_s:
             self.flush()
             return True
-        return False
+        return fired
 
     def flush(self) -> List[ShardTicket]:
         """Scatter everything pending to all shards, merge, fill tickets."""
+        # read-your-writes: rows submitted before these queries must be live
+        self.flush_adds()
         if not self._pending:
             return []
         tickets, self._pending = self._pending, []
@@ -343,6 +453,10 @@ class ShardedAnnService:
             "requests": self.requests,
             "queries": self.queries,
             "batches": self.batches,
+            "adds": self.adds,
+            "add_rows": self.add_rows,
+            "add_batches": self.add_batches,
+            "add_s": self.add_s,
             "shards": float(self.nshards),
             "partial_batches": float(self.partial_batches),
             "shards_failed": float(self.shards_failed),
