@@ -1,0 +1,119 @@
+"""CLI for the static-analysis pass.
+
+``python -m repro.analysis [paths...]`` analyzes ``src/repro`` (or the
+given files/directories), subtracts the committed baseline, prints the
+remaining findings and exits non-zero if any survive.
+
+Options::
+
+    --baseline PATH       baseline JSON (default: analysis_baseline.json
+                          next to the repo root if present)
+    --write-baseline      rewrite the baseline from the current findings
+                          (grandfathers everything; exits 0)
+    --format text|json    output format (default text)
+    --rules RPA001,...    run only the named rules
+    --show-baselined      also list grandfathered findings (text format)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional, Sequence
+
+from .core import (Finding, all_checkers, analyze_paths, load_baseline,
+                   split_baselined, write_baseline)
+
+DEFAULT_BASELINE = "analysis_baseline.json"
+
+
+def _default_paths() -> List[str]:
+    # prefer src/repro relative to cwd, else the package's own tree
+    cand = os.path.join("src", "repro")
+    if os.path.isdir(cand):
+        return [cand]
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    return [here]
+
+
+def _default_baseline() -> Optional[str]:
+    if os.path.exists(DEFAULT_BASELINE):
+        return DEFAULT_BASELINE
+    return None
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Project-specific static analysis (RPA001-RPA006).")
+    p.add_argument("paths", nargs="*", default=None,
+                   help="files or directories to analyze "
+                        "(default: src/repro)")
+    p.add_argument("--baseline", default=None,
+                   help="baseline JSON of grandfathered findings "
+                        f"(default: {DEFAULT_BASELINE} if present)")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="rewrite the baseline file from current findings")
+    p.add_argument("--format", choices=("text", "json"), default="text",
+                   dest="fmt", help="output format")
+    p.add_argument("--rules", default=None,
+                   help="comma-separated rule ids to run (default: all)")
+    p.add_argument("--show-baselined", action="store_true",
+                   help="also print grandfathered findings")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the registered rules and exit")
+    return p
+
+
+def _emit_text(new: Sequence[Finding], old: Sequence[Finding],
+               show_baselined: bool, out) -> None:
+    for f in new:
+        print(str(f), file=out)
+    if show_baselined:
+        for f in old:
+            print(f"{f} [baselined]", file=out)
+    n_old = f" ({len(old)} baselined)" if old else ""
+    print(f"repro.analysis: {len(new)} finding(s){n_old}", file=out)
+
+
+def _emit_json(new: Sequence[Finding], old: Sequence[Finding], out) -> None:
+    payload = {
+        "findings": [f.to_dict() for f in new],
+        "baselined": [f.to_dict() for f in old],
+    }
+    json.dump(payload, out, indent=1, sort_keys=True)
+    out.write("\n")
+
+
+def main(argv: Optional[Sequence[str]] = None, out=None) -> int:
+    out = out if out is not None else sys.stdout
+    args = build_parser().parse_args(argv)
+
+    if args.list_rules:
+        for c in all_checkers():
+            print(f"{c.rule}  {c.title}", file=out)
+        return 0
+
+    rules = ([r.strip() for r in args.rules.split(",") if r.strip()]
+             if args.rules else None)
+    paths = list(args.paths) if args.paths else _default_paths()
+    findings = analyze_paths(paths, rules=rules)
+
+    baseline_path = args.baseline or _default_baseline()
+    if args.write_baseline:
+        target = args.baseline or DEFAULT_BASELINE
+        write_baseline(target, findings)
+        print(f"repro.analysis: wrote {len(findings)} finding(s) to "
+              f"{target}", file=out)
+        return 0
+
+    baseline = load_baseline(baseline_path)
+    new, old = split_baselined(findings, baseline)
+
+    if args.fmt == "json":
+        _emit_json(new, old, out)
+    else:
+        _emit_text(new, old, args.show_baselined, out)
+    return 1 if new else 0

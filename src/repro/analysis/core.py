@@ -1,0 +1,249 @@
+"""Framework for the project's static-analysis pass.
+
+Three small pieces every checker shares:
+
+* :class:`Finding` — one diagnostic: file, line, rule id, message.  The
+  *fingerprint* (path + rule + message, no line) is what baselines match
+  on, so a grandfathered finding survives unrelated edits above it.
+* :class:`Checker` — the visitor contract.  A checker declares its rule
+  id, decides per-module whether it ``applies`` (path-scoped rules), and
+  returns findings from ``check``.  Concrete checkers register with
+  :func:`register` so the CLI and the tier-1 gate run one shared list.
+* :class:`ModuleContext` — parsed source handed to checkers: posix-ish
+  module path (``repro/...``), source text, AST, and the per-line
+  suppression table (``# repro: ignore[RPA001]`` or a bare
+  ``# repro: ignore`` for every rule on that line).
+
+Baselines are JSON ({"findings": [{path, rule, message}, ...]}): the
+committed file grandfathers known findings; ``--write-baseline``
+regenerates it.  The runner (:func:`analyze_paths`) walks ``.py`` files,
+skips nothing inside the tree it is pointed at, and returns findings
+sorted by (path, line, rule) so output and baselines are deterministic.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Type
+
+__all__ = [
+    "Finding", "Checker", "ModuleContext", "CHECKERS", "register",
+    "all_checkers", "analyze_source", "analyze_file", "analyze_paths",
+    "iter_python_files", "load_baseline", "write_baseline",
+    "split_baselined", "module_path",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic emitted by a checker."""
+
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    @property
+    def fingerprint(self) -> str:
+        """Baseline identity: stable across line drift."""
+        return f"{self.path}::{self.rule}::{self.message}"
+
+    def to_dict(self) -> Dict[str, object]:
+        return {"path": self.path, "line": self.line,
+                "rule": self.rule, "message": self.message}
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}"
+
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro:\s*ignore(?:\[\s*([A-Za-z0-9_,\s]+?)\s*\])?")
+
+
+def _suppressions(lines: Sequence[str]) -> Dict[int, Optional[frozenset]]:
+    """1-based line -> suppressed rule set (``None`` = every rule)."""
+    out: Dict[int, Optional[frozenset]] = {}
+    for i, line in enumerate(lines, 1):
+        m = _SUPPRESS_RE.search(line)
+        if not m:
+            continue
+        rules = m.group(1)
+        out[i] = (frozenset(r.strip().upper() for r in rules.split(","))
+                  if rules else None)
+    return out
+
+
+def module_path(path: str) -> str:
+    """Normalize a filesystem path to the ``repro/...`` form rules scope on.
+
+    Keeps everything from the last ``repro`` path segment onward; paths
+    outside a ``repro`` tree pass through posix-normalized (tests hand
+    fixture sources a virtual ``repro/...`` path directly).
+    """
+    p = str(path).replace(os.sep, "/")
+    parts = p.split("/")
+    for i in range(len(parts) - 1, -1, -1):
+        if parts[i] == "repro":
+            return "/".join(parts[i:])
+    return p.lstrip("./")
+
+
+class ModuleContext:
+    """Parsed module handed to checkers."""
+
+    def __init__(self, source: str, path: str):
+        self.path = module_path(path)
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source)
+        self.suppressions = _suppressions(self.lines)
+
+    def suppressed(self, line: int, rule: str) -> bool:
+        rules = self.suppressions.get(line, False)
+        if rules is False:
+            return False
+        return rules is None or rule in rules
+
+
+class Checker:
+    """One rule: ``applies`` scopes by module, ``check`` emits findings."""
+
+    rule: str = "RPA000"
+    title: str = ""
+
+    def applies(self, ctx: ModuleContext) -> bool:
+        return True
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        raise NotImplementedError
+
+    def finding(self, ctx: ModuleContext, node, message: str) -> Finding:
+        line = node if isinstance(node, int) else node.lineno
+        return Finding(path=ctx.path, line=line, rule=self.rule,
+                       message=message)
+
+
+CHECKERS: List[Type[Checker]] = []
+
+
+def register(cls: Type[Checker]) -> Type[Checker]:
+    CHECKERS.append(cls)
+    return cls
+
+
+def all_checkers(rules: Optional[Iterable[str]] = None) -> List[Checker]:
+    # checkers live in a sibling module; import here so `import
+    # repro.analysis.core` alone never misses registrations
+    from . import checkers as _checkers  # noqa: F401  (registration import)
+
+    wanted = {r.upper() for r in rules} if rules is not None else None
+    out = [cls() for cls in CHECKERS]
+    if wanted is not None:
+        unknown = wanted - {c.rule for c in out}
+        if unknown:
+            raise ValueError(f"unknown rule(s): {sorted(unknown)}")
+        out = [c for c in out if c.rule in wanted]
+    return out
+
+
+def analyze_source(source: str, path: str,
+                   rules: Optional[Iterable[str]] = None,
+                   respect_scope: bool = True) -> List[Finding]:
+    """Run the (selected) checkers over one module's source text.
+
+    ``path`` may be a virtual ``repro/...`` path: scoped rules key off it,
+    so tests can analyze fixture snippets as if they lived in the tree.
+    ``respect_scope=False`` forces every checker to run regardless of its
+    ``applies`` scoping.
+    """
+    try:
+        ctx = ModuleContext(source, path)
+    except SyntaxError as e:
+        return [Finding(path=module_path(path), line=e.lineno or 1,
+                        rule="RPA000", message=f"syntax error: {e.msg}")]
+    findings: List[Finding] = []
+    for checker in all_checkers(rules):
+        if respect_scope and not checker.applies(ctx):
+            continue
+        for f in checker.check(ctx):
+            if not ctx.suppressed(f.line, f.rule):
+                findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.message))
+    return findings
+
+
+def analyze_file(path: str,
+                 rules: Optional[Iterable[str]] = None) -> List[Finding]:
+    with open(path, encoding="utf-8") as fh:
+        return analyze_source(fh.read(), path, rules=rules)
+
+
+def iter_python_files(paths: Sequence[str]) -> List[str]:
+    """Expand files/directories into a sorted, deduplicated .py file list."""
+    out: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs.sort()
+                dirs[:] = [d for d in dirs if d != "__pycache__"]
+                out.extend(os.path.join(root, f)
+                           for f in sorted(files) if f.endswith(".py"))
+        elif p.endswith(".py"):
+            out.append(p)
+    seen, uniq = set(), []
+    for p in out:
+        if p not in seen:
+            seen.add(p)
+            uniq.append(p)
+    return uniq
+
+
+def analyze_paths(paths: Sequence[str],
+                  rules: Optional[Iterable[str]] = None) -> List[Finding]:
+    """Analyze every .py file under ``paths``; deterministic order."""
+    findings: List[Finding] = []
+    for f in iter_python_files(paths):
+        findings.extend(analyze_file(f, rules=rules))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.message))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+def load_baseline(path: Optional[str]) -> frozenset:
+    """Fingerprint set from a baseline JSON file (missing/None -> empty)."""
+    if path is None or not os.path.exists(path):
+        return frozenset()
+    with open(path, encoding="utf-8") as fh:
+        data = json.load(fh)
+    return frozenset(
+        f"{e['path']}::{e['rule']}::{e['message']}"
+        for e in data.get("findings", []))
+
+
+def write_baseline(path: str, findings: Sequence[Finding]) -> None:
+    entries = sorted(
+        {(f.path, f.rule, f.message) for f in findings})
+    data = {
+        "comment": "grandfathered repro.analysis findings; regenerate with "
+                   "`python -m repro.analysis --write-baseline`",
+        "findings": [{"path": p, "rule": r, "message": m}
+                     for p, r, m in entries],
+    }
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(data, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+
+
+def split_baselined(findings: Sequence[Finding], baseline: frozenset
+                    ) -> Tuple[List[Finding], List[Finding]]:
+    """(new, grandfathered) partition of ``findings`` by fingerprint."""
+    new = [f for f in findings if f.fingerprint not in baseline]
+    old = [f for f in findings if f.fingerprint in baseline]
+    return new, old

@@ -349,7 +349,7 @@ def _resolve_engine(engine: str) -> str:
     if engine == "auto":
         try:
             backend = _jax().default_backend()
-        except Exception:  # pragma: no cover - jax always present here
+        except (ImportError, RuntimeError):  # pragma: no cover - no backend
             backend = "cpu"
         # interpret-mode Pallas is a correctness path, not a fast path:
         # on CPU the plain-XLA scorer is the performant batched fallback.

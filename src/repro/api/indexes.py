@@ -26,6 +26,7 @@ from ..ann.ivf import IVFIndex
 from ..ann.pq import ProductQuantizer
 from ..ann.scan import score_rows_flat, select_topk
 from ..ann.stats import SearchStats
+from .protocol import Index
 from .spec import IndexSpec, parse_spec
 
 __all__ = ["FlatIndex", "IVFApiIndex", "GraphApiIndex", "as_api_index"]
@@ -373,8 +374,9 @@ def as_api_index(index):
         return IVFApiIndex.from_built(index)
     if isinstance(index, GraphIndex):
         return GraphApiIndex.from_built(index)
-    if hasattr(index, "spec") and hasattr(index, "memory_ledger"):
-        return index  # already protocol-shaped (duck-typed)
+    if isinstance(index, Index):
+        return index  # already protocol-shaped
+
     raise TypeError(f"cannot adapt {type(index).__name__} to repro.api.Index")
 
 

@@ -24,8 +24,11 @@ monolithic tie convention.
 deadline.  A shard that exhausts retries, dies or misses the deadline is
 dropped from the merge: the batch completes from the surviving shards'
 results with ``stats.partial=True`` and ``stats.shards_failed`` set —
-never an exception.  ``FaultPolicy`` is the injection seam tests use to
-script kills and delays.
+never an exception *for shard faults*.  Only the shard fault taxonomy is
+degradable (``ShardTimeout``/``ShardDead``/timeouts); programming errors
+inside a worker propagate so bugs can't hide as "partial" batches
+(RPA006 in ``repro.analysis``).  ``FaultPolicy`` is the injection seam
+tests use to script kills and delays.
 """
 
 from __future__ import annotations
@@ -34,6 +37,7 @@ import dataclasses
 import time
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FuturesTimeout
 from pathlib import Path
 from threading import Lock
 from typing import Callable, Dict, List, Optional, Tuple
@@ -42,8 +46,9 @@ import numpy as np
 
 from ..ann.scan import MERGE_KEY_PAD
 from ..ann.stats import SearchStats, combine_stats
+from ..api.protocol import IvfBacked
 from ..serve.ann_service import AddTicket, AnnService, BatchPolicy
-from .faults import FaultPolicy, RetryPolicy, ShardDead
+from .faults import FaultPolicy, RetryPolicy, ShardDead, ShardTimeout
 from .plan import ShardPlan
 
 __all__ = ["ShardedAnnService", "ShardTicket"]
@@ -122,7 +127,7 @@ class ShardedAnnService:
         self._workers: List[AnnService] = []
         for idx in indexes:
             opts = dict(search_opts)
-            if hasattr(idx, "ivf"):
+            if isinstance(idx, IvfBacked):
                 opts["with_keys"] = True   # IVF tie keys for the stable merge
             self._workers.append(AnnService(
                 idx, topk=topk, policy=worker_policy, clock=clock,
@@ -381,7 +386,10 @@ class ShardedAnnService:
                 timeout = (max(0.0, end - time.monotonic())
                            if end is not None else None)
                 out[s] = f.result(timeout=timeout)
-            except Exception as e:  # noqa: BLE001 — degrade, never raise
+            except (ShardTimeout, ShardDead, TimeoutError,
+                    FuturesTimeout) as e:
+                # degrade: drop the shard from the merge (stats.partial);
+                # programming errors propagate instead of being swallowed
                 self.fault_log.append((batch_id, s, repr(e)))
         return out
 
@@ -404,7 +412,7 @@ class ShardedAnnService:
                                         attempts=attempt + 1)
                 except ShardDead:
                     raise                      # dead shards don't heal
-                except Exception as e:
+                except (ShardTimeout, TimeoutError, FuturesTimeout):
                     attempt += 1
                     if attempt >= self.retry.max_attempts:
                         raise

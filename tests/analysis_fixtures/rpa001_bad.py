@@ -1,0 +1,39 @@
+# analyzed by tests under the virtual path repro/core/codecs_fixture.py
+# (never imported; parsed only).  Marked lines must each emit exactly
+# one RPA001 finding.
+from repro.core.codecs import IdCodec
+
+
+class MissingSurface(IdCodec):  # FIRE (size_bits not statically defined)
+    def encode(self, ids, universe):
+        return b""
+
+    def decode(self, blob):  # FIRE (signature drops universe)
+        return []
+
+
+class WrongGather(IdCodec):
+    def encode(self, ids, universe):
+        return b""
+
+    def decode(self, blob, universe):
+        return []
+
+    def size_bits(self, blob):
+        return 0
+
+    def gather(self, blob, positions):  # FIRE (contract names it offsets)
+        return None
+
+
+class NotACodec:  # unrelated class: no codec findings
+    def decode(self, whatever):
+        return whatever
+
+
+def route(index):
+    if hasattr(index, "ivf"):  # FIRE (duck-typing on the hot path)
+        return "ivf"
+    if hasattr(index, "spec"):  # repro: ignore[RPA001]
+        return "api"
+    return "raw"

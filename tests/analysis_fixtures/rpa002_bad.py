@@ -1,0 +1,29 @@
+# lock-discipline violations; analyzed under repro/shard/service_fixture.py
+from concurrent.futures import ThreadPoolExecutor
+from threading import Lock
+
+
+class Router:
+    def __init__(self):
+        self._pool = ThreadPoolExecutor(2)
+        self._lock = Lock()
+        self._workers = []
+        self.count = 0
+        self.log = []
+
+    def kick(self, s, batch):
+        return self._pool.submit(self._work, s, batch)
+
+    def _work(self, s, batch):
+        self.count += 1  # FIRE (executor write outside the lock)
+        self.log.append(s)  # FIRE (executor mutator outside the lock)
+        svc = self._workers[s]
+        svc.flush()  # FIRE (worker touched outside its lock)
+        with self._lock:
+            self.count += 1  # guarded: fine
+            self._workers[s].flush()  # guarded: fine
+        self.count += 1  # repro: ignore[RPA002]
+
+    def reset(self):
+        self.count = 0  # FIRE (attr shared with the executor, unguarded)
+        self.unrelated = 1  # not executor-shared: fine

@@ -1,0 +1,25 @@
+# disciplined locking: zero RPA002 findings expected
+from concurrent.futures import ThreadPoolExecutor
+from threading import Lock
+
+
+class Router:
+    def __init__(self):
+        self._pool = ThreadPoolExecutor(2)
+        self._locks = [Lock(), Lock()]
+        self._workers = []
+        self.count = 0
+
+    def kick(self, s, batch):
+        return self._pool.submit(self._work, s, batch)
+
+    def _work(self, s, batch):
+        with self._locks[s]:
+            self.count += 1
+            svc = self._workers[s]
+            return svc.flush()
+
+    def reset(self):
+        with self._locks[0]:
+            self.count = 0
+        self.caller_only = 1  # never touched on the executor: fine

@@ -1,0 +1,25 @@
+# determinism violations; analyzed under repro/core/container.py
+import os
+import time
+import uuid
+
+import numpy as np
+
+
+def pack_blobs(parts, root):
+    for p in set(parts):  # FIRE (unsorted set iteration)
+        _consume(p)
+    for k, v in parts.items():  # FIRE (dict-view iteration, order implicit)
+        _consume(k, v)
+    for k, v in sorted(parts.items()):  # explicit order: fine
+        _consume(k, v)
+    blob_id = uuid.uuid4()  # FIRE (nondeterministic id in the byte stream)
+    names = os.listdir(root)  # FIRE (OS-ordered directory listing)
+    names2 = sorted(os.listdir(root))  # wrapped: fine
+    jitter = np.random.rand()  # FIRE (random source)
+    stamp = time.time()  # repro: ignore[RPA003]
+    return blob_id, names, names2, jitter, stamp
+
+
+def _consume(*a):
+    return a

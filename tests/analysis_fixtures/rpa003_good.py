@@ -1,0 +1,13 @@
+# deterministic writer: zero RPA003 findings under repro/core/container.py
+import json
+
+
+def pack_sections(sections):
+    blob = bytearray()
+    for name in sorted(sections):          # explicit ordering
+        blob += sections[name]
+    for entry in [1, 2, 3]:                # list iteration: deterministic
+        blob.append(entry)
+    manifest = json.dumps(
+        {"sections": sorted(sections)}, sort_keys=True)
+    return bytes(blob), manifest

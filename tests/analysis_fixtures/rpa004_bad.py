@@ -1,0 +1,16 @@
+# unguarded wide shifts; any repro/ path (RPA004 is unscoped)
+OFFSET_BITS = 40
+RANK_BITS = 64 - OFFSET_BITS  # folds to 24
+
+
+def pack(rank, offset):
+    return (rank << OFFSET_BITS) | offset  # FIRE (no guard in scope)
+
+
+def pack_literal_amount(rank, offset):
+    return (rank << 32) | offset  # FIRE
+
+
+def pack_suppressed(rank, offset):
+    key = (rank << 33) | offset  # repro: ignore[RPA004]
+    return key

@@ -1,0 +1,20 @@
+# guarded / harmless shifts: zero RPA004 findings
+import numpy as np
+
+OFFSET_BITS = 40
+TABLE_SIZE = 1 << 40            # literal left operand: python int, no wrap
+
+
+def pack_guarded(rank, offset):
+    if offset >= (1 << OFFSET_BITS):
+        raise OverflowError("offset exceeds the packed width")
+    return (rank << OFFSET_BITS) | int(offset)
+
+
+def pack_cast(rank, offset):
+    r = np.asarray(rank, np.uint64)
+    return (r << np.uint64(OFFSET_BITS)) | np.uint64(offset)
+
+
+def narrow(a):
+    return a << 8               # < 32 bits: out of scope

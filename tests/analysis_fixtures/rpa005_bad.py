@@ -1,0 +1,36 @@
+# purity violations in traced functions; analyzed under
+# repro/kernels/fixture.py
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import jax.experimental.pallas as pl
+
+
+@jax.jit
+def scorer(x, state):
+    print("tracing", x)  # FIRE (host print)
+    v = x.sum().item()  # FIRE (host sync)
+    y = float(x[0])  # FIRE (scalar coercion)
+    z = np.sqrt(x)  # FIRE (host numpy constant-folds)
+    state.counter = 1  # FIRE (python-side mutation)
+    q = float(x[1])  # repro: ignore[RPA005]
+    return v + y + z + q
+
+
+def _kern(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0  # ref store: fine
+    t = time.time()  # FIRE (wall clock inside a pallas kernel)
+    del t
+
+
+def run(x):
+    return pl.pallas_call(_kern, out_shape=None)(x)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk(x, k):
+    return x.tolist()  # FIRE (host sync)

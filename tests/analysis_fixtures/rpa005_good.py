@@ -1,0 +1,36 @@
+# pure traced code + free host helpers: zero RPA005 findings under
+# repro/kernels/fixture.py
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import jax.experimental.pallas as pl
+
+
+@jax.jit
+def scorer(x):
+    d = jnp.sum(x * x, axis=-1)
+    return jnp.sqrt(d).astype(jnp.float32)
+
+
+def _kern(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def run(x):
+    return pl.pallas_call(_kern, out_shape=None)(x)
+
+
+def host_helper(x):
+    # not traced: host-side numpy / coercions are fine here
+    arr = np.asarray(x)
+    total = float(arr.sum())
+    print("host total", total)
+    return int(total)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def blocked(x, block):
+    return jnp.reshape(x, (-1, block))

@@ -1,0 +1,18 @@
+# analyzed under the allowlisted path repro/launch/dryrun.py: broad
+# excepts are the harvesting contract there, but must record the failure
+def harvest(jobs):
+    records = []
+    for job in jobs:
+        try:
+            records.append({"status": "ok", "out": job()})
+        except Exception as e:  # records the failure: fine
+            records.append(
+                {"status": "error", "error": f"{type(e).__name__}: {e}"})
+    return records
+
+
+def swallow(job):
+    try:
+        return job()
+    except Exception:  # FIRE (allowlisted but swallows silently)
+        return None

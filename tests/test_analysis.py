@@ -1,0 +1,243 @@
+"""Tier-1 gate + unit tests for the repro.analysis static-analysis pass.
+
+Three layers:
+
+* fixture tests — every rule fires on its bad fixture (exact lines,
+  marked ``# FIRE``) and stays quiet on the good one; stripping the
+  ``# repro: ignore[...]`` comments resurfaces exactly the suppressed
+  findings.
+* framework tests — suppressions, baselines, path normalization, CLI.
+* the gate — the full pass over ``src/repro`` must report zero
+  non-baselined findings, and stay fast enough to run in tier-1.
+"""
+
+import io
+import json
+import pathlib
+import re
+import time
+
+import pytest
+
+from repro.analysis import (Finding, all_checkers, analyze_paths,
+                            analyze_source, load_baseline, module_path,
+                            split_baselined, write_baseline)
+from repro.analysis.cli import main
+
+HERE = pathlib.Path(__file__).resolve().parent
+FIXTURES = HERE / "analysis_fixtures"
+REPO = HERE.parent
+SRC_REPRO = REPO / "src" / "repro"
+BASELINE = REPO / "analysis_baseline.json"
+
+#: rule -> (bad fixture, good fixture, virtual module path)
+CASES = {
+    "RPA001": ("rpa001_bad.py", "rpa001_good.py",
+               "repro/core/codecs_fixture.py"),
+    "RPA002": ("rpa002_bad.py", "rpa002_good.py",
+               "repro/shard/service_fixture.py"),
+    "RPA003": ("rpa003_bad.py", "rpa003_good.py",
+               "repro/core/container.py"),
+    "RPA004": ("rpa004_bad.py", "rpa004_good.py",
+               "repro/ann/pack_fixture.py"),
+    "RPA005": ("rpa005_bad.py", "rpa005_good.py",
+               "repro/kernels/fixture.py"),
+    "RPA006": ("rpa006_bad.py", "rpa006_good.py",
+               "repro/shard/router_fixture.py"),
+}
+
+
+def _read(name):
+    return (FIXTURES / name).read_text()
+
+
+def _fire_lines(source):
+    return [i for i, line in enumerate(source.splitlines(), 1)
+            if "# FIRE" in line]
+
+
+# ---------------------------------------------------------------------------
+# per-rule fixtures
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rule", sorted(CASES))
+def test_rule_fires_on_bad_fixture(rule):
+    bad, _, vpath = CASES[rule]
+    source = _read(bad)
+    findings = analyze_source(source, vpath, rules=[rule])
+    assert [f.line for f in findings] == _fire_lines(source)
+    assert {f.rule for f in findings} == {rule}
+    assert all(f.path == vpath for f in findings)
+
+
+@pytest.mark.parametrize("rule", sorted(CASES))
+def test_rule_quiet_on_good_fixture(rule):
+    _, good, vpath = CASES[rule]
+    findings = analyze_source(_read(good), vpath, rules=[rule])
+    assert findings == []
+
+
+@pytest.mark.parametrize("rule", sorted(CASES))
+def test_suppression_comment_suppresses(rule):
+    """Stripping `# repro: ignore[...]` resurfaces exactly those lines."""
+    bad, _, vpath = CASES[rule]
+    source = _read(bad)
+    suppressed_lines = [i for i, line in enumerate(source.splitlines(), 1)
+                        if "repro: ignore" in line]
+    assert suppressed_lines, f"{bad} must exercise suppression"
+    stripped = re.sub(r"#\s*repro:\s*ignore\[[^\]]*\]", "", source)
+    before = {f.line for f in analyze_source(source, vpath, rules=[rule])}
+    after = {f.line for f in analyze_source(stripped, vpath, rules=[rule])}
+    assert after - before == set(suppressed_lines)
+
+
+def test_bare_ignore_suppresses_every_rule():
+    src = "def route(ix):\n    return hasattr(ix, 'ivf')  # repro: ignore\n"
+    assert analyze_source(src, "repro/api/fixture.py", rules=["RPA001"]) == []
+
+
+def test_rpa006_allowlisted_path_must_record():
+    source = _read("rpa006_allowlisted.py")
+    findings = analyze_source(source, "repro/launch/dryrun.py",
+                              rules=["RPA006"])
+    assert [f.line for f in findings] == _fire_lines(source)
+    # same code outside the allowlist: every broad except fires
+    outside = analyze_source(source, "repro/launch/other.py",
+                             rules=["RPA006"])
+    assert len(outside) == 2
+
+
+# ---------------------------------------------------------------------------
+# rule scoping
+# ---------------------------------------------------------------------------
+
+def test_rpa003_scopes_to_writer_functions():
+    src = ("import uuid\n"
+           "def pack_header(m):\n    return uuid.uuid4()\n"
+           "def unrelated(m):\n    return uuid.uuid4()\n")
+    findings = analyze_source(src, "repro/ann/other.py", rules=["RPA003"])
+    assert [f.line for f in findings] == [3]   # only inside pack_header
+
+
+def test_rpa005_only_applies_under_kernels_and_scan():
+    src = "import jax\n@jax.jit\ndef f(x):\n    return float(x[0])\n"
+    hot = analyze_source(src, "repro/kernels/x.py", rules=["RPA005"])
+    cold = analyze_source(src, "repro/serve/x.py", rules=["RPA005"])
+    assert [f.line for f in hot] == [4]
+    assert cold == []
+
+
+def test_rpa001_hasattr_only_on_hot_paths():
+    src = "def f(ix):\n    return hasattr(ix, 'ivf')\n"
+    hot = analyze_source(src, "repro/serve/x.py", rules=["RPA001"])
+    cold = analyze_source(src, "repro/launch/x.py", rules=["RPA001"])
+    assert [f.line for f in hot] == [2]
+    assert cold == []
+
+
+# ---------------------------------------------------------------------------
+# framework
+# ---------------------------------------------------------------------------
+
+def test_finding_str_and_fingerprint():
+    f = Finding(path="repro/a.py", line=3, rule="RPA001", message="m")
+    assert str(f) == "repro/a.py:3: RPA001: m"
+    assert f.fingerprint == "repro/a.py::RPA001::m"
+    assert f.to_dict()["line"] == 3
+
+
+def test_module_path_normalization():
+    assert module_path("/x/y/src/repro/ann/scan.py") == "repro/ann/scan.py"
+    assert module_path("repro/core/codecs.py") == "repro/core/codecs.py"
+    assert module_path("./tests/foo.py") == "tests/foo.py"
+
+
+def test_syntax_error_becomes_rpa000():
+    findings = analyze_source("def broken(:\n", "repro/x.py")
+    assert len(findings) == 1
+    assert findings[0].rule == "RPA000"
+
+
+def test_unknown_rule_rejected():
+    with pytest.raises(ValueError, match="RPA999"):
+        analyze_source("x = 1\n", "repro/x.py", rules=["RPA999"])
+
+
+def test_registry_has_all_six_rules():
+    rules = {c.rule for c in all_checkers()}
+    assert rules == set(CASES)
+
+
+def test_baseline_round_trip(tmp_path):
+    f1 = Finding(path="repro/a.py", line=3, rule="RPA001", message="m1")
+    f2 = Finding(path="repro/b.py", line=9, rule="RPA006", message="m2")
+    path = tmp_path / "base.json"
+    write_baseline(str(path), [f1, f2, f1])          # dedup on write
+    base = load_baseline(str(path))
+    assert base == {f1.fingerprint, f2.fingerprint}
+    # fingerprints are line-independent: a drifted copy still matches
+    drifted = Finding(path="repro/a.py", line=99, rule="RPA001",
+                      message="m1")
+    new, old = split_baselined([drifted, f2], base)
+    assert new == [] and len(old) == 2
+    assert load_baseline(str(tmp_path / "missing.json")) == frozenset()
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_flags_bad_fixture_and_json(tmp_path):
+    bad = FIXTURES / "rpa004_bad.py"
+    out = io.StringIO()
+    rc = main([str(bad), "--rules", "RPA004", "--format", "json",
+               "--baseline", str(tmp_path / "none.json")], out=out)
+    assert rc == 1
+    payload = json.loads(out.getvalue())
+    assert {e["rule"] for e in payload["findings"]} == {"RPA004"}
+    assert payload["baselined"] == []
+
+
+def test_cli_baseline_workflow(tmp_path):
+    bad = FIXTURES / "rpa004_bad.py"
+    base = tmp_path / "base.json"
+    out = io.StringIO()
+    rc = main([str(bad), "--rules", "RPA004", "--write-baseline",
+               "--baseline", str(base)], out=out)
+    assert rc == 0 and base.exists()
+    rc = main([str(bad), "--rules", "RPA004", "--baseline", str(base)],
+              out=out)
+    assert rc == 0          # everything grandfathered
+    rc = main([str(bad), "--rules", "RPA004",
+               "--baseline", str(tmp_path / "empty.json")], out=out)
+    assert rc == 1
+
+
+def test_cli_list_rules():
+    out = io.StringIO()
+    assert main(["--list-rules"], out=out) == 0
+    assert "RPA001" in out.getvalue()
+
+
+# ---------------------------------------------------------------------------
+# the tier-1 gate: full pass over src/repro
+# ---------------------------------------------------------------------------
+
+def test_full_repo_pass_is_clean_and_fast():
+    t0 = time.perf_counter()
+    findings = analyze_paths([str(SRC_REPRO)])
+    elapsed = time.perf_counter() - t0
+    baseline = load_baseline(str(BASELINE) if BASELINE.exists() else None)
+    new, _ = split_baselined(findings, baseline)
+    assert new == [], "new static-analysis findings:\n" + "\n".join(
+        str(f) for f in new)
+    # lint must stay cheap enough to live in tier-1 (ISSUE 9: ~5s budget)
+    assert elapsed < 5.0, f"full-repo analysis took {elapsed:.2f}s"
+
+
+def test_committed_baseline_is_minimal():
+    # the committed baseline grandfathers nothing: findings got fixed,
+    # not buried (ISSUE 9 acceptance criterion)
+    assert BASELINE.exists()
+    data = json.loads(BASELINE.read_text())
+    assert data["findings"] == []
