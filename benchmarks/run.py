@@ -15,7 +15,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset: table1 table2 table3 table4 fig3 moe codec "
-                         "roofline graph spec shard ingest")
+                         "roofline graph spec shard ingest select")
     ap.add_argument("--spec", action="append", default=None,
                     help="factory spec string for the 'spec' suite "
                          "(repeatable); implies --only spec when --only is "
@@ -23,8 +23,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (codec_speed, fig3_code_compression, graph_bench,
-                   ingest_bench, moe_routing, roofline, shard_bench,
-                   spec_bench, table1_bpe, table2_search_time,
+                   ingest_bench, moe_routing, roofline, select_bench,
+                   shard_bench, spec_bench, table1_bpe, table2_search_time,
                    table3_offline_graph, table4_large_scale)
 
     suites = {
@@ -39,6 +39,7 @@ def main() -> None:
         "graph": graph_bench.main,
         "shard": shard_bench.main,
         "ingest": ingest_bench.main,
+        "select": select_bench.main,
         "spec": lambda quick=False: spec_bench.main(quick=quick,
                                                     specs=args.spec),
     }

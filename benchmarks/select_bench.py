@@ -1,0 +1,95 @@
+"""Host vs device top-k select — what the seg_topk kernel path saves.
+
+With ``select=host`` the scan engine pulls the whole padded ``(qb,
+C_pad)`` distance block to the host and cuts top-k in numpy; with
+``select=device`` the segmented top-k kernel cuts on device and only
+the ``(qb, K)`` short-list crosses — results are bit-identical either
+way (tests/test_scan_parity.py), so the interesting numbers are wall
+time and transferred bytes (``SearchStats.host_block_bytes``).  Sweeps
+nprobe x batch on one IVF index, plus the flat kernel path::
+
+    PYTHONPATH=src python -m benchmarks.run --quick --only select
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.ann.ivf import IVFIndex
+from repro.ann.scan import batched_flat_search, batched_search
+from repro.data.synthetic import make_dataset
+
+from .common import Timer, emit, save_result
+
+N = 100_000
+NLIST = 256
+NQ = 256
+TOPK = 10
+NPROBES = (16, 64, 256)
+BATCHES = (32, 128)
+
+
+def _time_search(idx, queries, nprobe, batch, select):
+    # warm the jit cache for this (nprobe, batch, select) shape off-clock
+    batched_search(idx, queries[:batch], nprobe=nprobe, topk=TOPK,
+                   engine="xla", query_block=batch, select=select,
+                   select_min=1)
+    with Timer() as t:
+        ids, dists, st = batched_search(
+            idx, queries, nprobe=nprobe, topk=TOPK, engine="xla",
+            query_block=batch, select=select, select_min=1)
+    return ids, dists, st, t.s
+
+
+def main(quick: bool = False) -> None:
+    n = N // (10 if quick else 1)
+    nq = NQ // (4 if quick else 1)
+    nprobes = NPROBES[:2] if quick else NPROBES
+    base, queries = make_dataset("sift-like", n, nq, seed=0)
+    idx = IVFIndex(nlist=NLIST, id_codec="roc").build(base, seed=1)
+
+    rows = []
+    for nprobe in nprobes:
+        for batch in BATCHES:
+            ih, dh, sh, th = _time_search(idx, queries, nprobe, batch, "host")
+            iv, dv, sv, tv = _time_search(idx, queries, nprobe, batch,
+                                          "device")
+            assert np.array_equal(ih, iv) and np.array_equal(dh, dv), \
+                "select=device diverged from select=host"
+            name = f"select/ivf_np{nprobe}_b{batch}"
+            emit(f"{name}_host", th / nq * 1e6,
+                 f"host_MB={sh.host_block_bytes / 1e6:.1f}")
+            emit(f"{name}_device", tv / nq * 1e6,
+                 f"host_MB={sv.host_block_bytes / 1e6:.1f}"
+                 f";speedup={th / tv:.2f}x")
+            rows.append({
+                "kind": "ivf", "nprobe": nprobe, "batch": batch, "nq": nq,
+                "host_us_per_query": th / nq * 1e6,
+                "device_us_per_query": tv / nq * 1e6,
+                "speedup": th / tv,
+                "host_block_bytes_host": int(sh.host_block_bytes),
+                "host_block_bytes_device": int(sv.host_block_bytes),
+                "device_selects": int(sv.device_select),
+            })
+
+    for batch in BATCHES:
+        batched_flat_search(base, queries[:batch], topk=TOPK, engine="xla",
+                            query_block=batch)        # warm
+        with Timer() as t:
+            _, _, st = batched_flat_search(base, queries, topk=TOPK,
+                                           engine="xla", query_block=batch)
+        emit(f"select/flat_b{batch}", t.s / nq * 1e6,
+             f"host_MB={st.host_block_bytes / 1e6:.1f}")
+        rows.append({
+            "kind": "flat", "batch": batch, "nq": nq,
+            "device_us_per_query": t.s / nq * 1e6,
+            "host_block_bytes_device": int(st.host_block_bytes),
+            "device_selects": int(st.device_select),
+        })
+
+    save_result("select", {"n": n, "nlist": NLIST, "topk": TOPK,
+                           "rows": rows})
+
+
+if __name__ == "__main__":
+    main(quick=True)

@@ -31,11 +31,19 @@ heads and after-the-fact parity tests:
   ``except``) only in the failure-harvesting allowlist, and such
   handlers must record the failure; everywhere else the concrete
   failure types must be named.
+* **RPA007 spec-grammar/docs drift** — the option keys
+  ``repro.api.spec`` actually parses (``KNOWN_OPTION_KEYS``) and the
+  keys documented in the ``spec-grammar`` block of
+  ``docs/architecture.md`` must match exactly, both directions: the
+  factory-string grammar is user-facing API and the docs page is its
+  normative reference.
 """
 
 from __future__ import annotations
 
 import ast
+import os
+import re
 from typing import Dict, List, Optional, Set, Tuple
 
 from .core import Checker, Finding, ModuleContext, register
@@ -43,7 +51,7 @@ from .core import Checker, Finding, ModuleContext, register
 __all__ = [
     "CodecProtocolChecker", "LockDisciplineChecker",
     "SerializationDeterminismChecker", "WidthContractChecker",
-    "JitPurityChecker", "BroadExceptChecker",
+    "JitPurityChecker", "BroadExceptChecker", "SpecGrammarDriftChecker",
 ]
 
 
@@ -718,3 +726,101 @@ class BroadExceptChecker(Checker):
                 if any(m in lw for m in self.RECORD_MARKERS):
                     return True
         return False
+
+
+# ---------------------------------------------------------------------------
+# RPA007 — spec-grammar / docs drift
+# ---------------------------------------------------------------------------
+
+_GRAMMAR_FENCE_RE = re.compile(
+    r"```[^\n`]*spec-grammar[^\n`]*\n(.*?)\n```", re.DOTALL)
+_GRAMMAR_KEY_RE = re.compile(r"^\s*([a-z_]+)\s*=\s", re.MULTILINE)
+
+
+@register
+class SpecGrammarDriftChecker(Checker):
+    rule = "RPA007"
+    title = "spec-grammar/docs drift"
+
+    MODULE = "repro/api/spec.py"
+    DOC = os.path.join("docs", "architecture.md")
+    KEYS_NAME = "KNOWN_OPTION_KEYS"
+
+    def applies(self, ctx: ModuleContext) -> bool:
+        return ctx.path == self.MODULE
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        code_keys = self._option_keys(ctx.tree)
+        if code_keys is None:
+            return [self.finding(
+                ctx, 1,
+                f"spec module must define {self.KEYS_NAME} as a "
+                "module-level tuple of string literals (the grammar keys "
+                "docs/architecture.md documents)")]
+        line, keys = code_keys
+        doc_path = self._locate_doc(ctx.fs_path)
+        if doc_path is None:
+            return [self.finding(
+                ctx, line,
+                f"cannot locate {self.DOC} above {ctx.fs_path}; the "
+                "factory-string grammar must have a docs page")]
+        with open(doc_path, encoding="utf-8") as fh:
+            doc_keys = self._doc_keys(fh.read())
+        if doc_keys is None:
+            return [self.finding(
+                ctx, line,
+                f"{self.DOC} has no ```spec-grammar fenced block; the "
+                "documented grammar is what RPA007 checks against")]
+        out: List[Finding] = []
+        for key in keys:
+            if key not in doc_keys:
+                out.append(self.finding(
+                    ctx, line,
+                    f"spec option {key!r} is parsed but missing from the "
+                    f"spec-grammar block in {self.DOC}"))
+        for key in doc_keys:
+            if key not in keys:
+                out.append(self.finding(
+                    ctx, line,
+                    f"spec option {key!r} is documented in the "
+                    f"spec-grammar block of {self.DOC} but not parsed "
+                    f"({self.KEYS_NAME})"))
+        return out
+
+    @classmethod
+    def _option_keys(cls, tree: ast.Module
+                     ) -> Optional[Tuple[int, Tuple[str, ...]]]:
+        for stmt in tree.body:
+            if not (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                    and isinstance(stmt.targets[0], ast.Name)
+                    and stmt.targets[0].id == cls.KEYS_NAME):
+                continue
+            if not isinstance(stmt.value, (ast.Tuple, ast.List)):
+                return None
+            keys: List[str] = []
+            for elt in stmt.value.elts:
+                if not (isinstance(elt, ast.Constant)
+                        and isinstance(elt.value, str)):
+                    return None
+                keys.append(elt.value)
+            return stmt.lineno, tuple(keys)
+        return None
+
+    @classmethod
+    def _locate_doc(cls, fs_path: str) -> Optional[str]:
+        d = os.path.dirname(os.path.abspath(fs_path))
+        while True:
+            cand = os.path.join(d, cls.DOC)
+            if os.path.isfile(cand):
+                return cand
+            parent = os.path.dirname(d)
+            if parent == d:
+                return None
+            d = parent
+
+    @staticmethod
+    def _doc_keys(doc: str) -> Optional[Tuple[str, ...]]:
+        m = _GRAMMAR_FENCE_RE.search(doc)
+        if m is None:
+            return None
+        return tuple(_GRAMMAR_KEY_RE.findall(m.group(1)))

@@ -47,7 +47,7 @@ def _default_baseline() -> Optional[str]:
 def build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="Project-specific static analysis (RPA001-RPA006).")
+        description="Project-specific static analysis (RPA001-RPA007).")
     p.add_argument("paths", nargs="*", default=None,
                    help="files or directories to analyze "
                         "(default: src/repro)")

@@ -97,6 +97,10 @@ class ModuleContext:
 
     def __init__(self, source: str, path: str):
         self.path = module_path(path)
+        #: the path as given (filesystem location when analyzing real
+        #: files) — rules that consult sibling artifacts (RPA007 reads
+        #: docs/architecture.md) walk up from here
+        self.fs_path = str(path)
         self.source = source
         self.lines = source.splitlines()
         self.tree = ast.parse(source)

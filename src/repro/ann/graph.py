@@ -207,21 +207,23 @@ class GraphIndex(CacheOwnerMixin):
 
     def search(self, queries: np.ndarray, ef: int = 16, topk: int = 10,
                engine: str = "auto", query_block: int = 64,
-               kernel_min: int | None = None):
+               kernel_min: int | None = None, select: str = "auto"):
         """Beam-batched search (repro.ann.graph_scan).
 
         Advances all queries in lockstep: per-step deduped friend-list
         gather through the shared decode cache, one blocked distance
         computation per step (``engine`` picks the Pallas kernel or the
         jitted XLA fallback; ``kernel_min`` gates the minimum tile that
-        takes it), exact beam admission.  Bit-identical to
-        :meth:`search_ref` — ids AND distances — for every codec/engine.
+        takes it; ``select`` places the per-step distance gather host- or
+        device-side), exact beam admission.  Bit-identical to
+        :meth:`search_ref` — ids AND distances — for every codec, engine
+        and select mode.
         """
         from .graph_scan import batched_graph_search
 
         return batched_graph_search(self, queries, ef=ef, topk=topk,
                                     engine=engine, query_block=query_block,
-                                    kernel_min=kernel_min)
+                                    kernel_min=kernel_min, select=select)
 
     def search_ref(self, queries: np.ndarray, ef: int = 16, topk: int = 10):
         """Best-first (beam ef) search decoding friend lists on the fly.

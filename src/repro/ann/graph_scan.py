@@ -18,7 +18,11 @@ scans query blocks (``repro.ann.scan``):
    (unvisited) candidates across all beams is gathered once and scored
    against the active queries through the ``l2_dist`` Pallas kernel or
    the jitted XLA fallback (``engine=auto|xla|pallas``, resolved by
-   ``scan._resolve_engine``; shapes bucketed by ``scan._bucket``).
+   ``scan._resolve_engine``; shapes bucketed by ``scan._bucket``).  With
+   ``select="device"`` (the off-CPU ``auto`` default) the per-candidate
+   distance vector is gathered on device and only a ``(n_pad,)`` vector
+   crosses to the host — the ``(qb_pad, n_pad)`` step block never does
+   (``stats.host_block_bytes`` / ``stats.device_select`` are the ledger).
 4. **Exact beam admission**: kernel distances only *prune* — candidates
    provably outside the beam (kernel distance beyond the beam bound plus
    the shared :func:`~repro.ann.scan.rescore_eps` error band) are
@@ -85,7 +89,29 @@ def _graph_scorers():
         an = jnp.sum(a * a, axis=1)
         return qn - 2.0 * q @ a.T + an[None]
 
-    return {"pallas": pallas, "xla": xla}
+    # device-select variants (``select="device"``): same scorer expression,
+    # but the per-candidate distance vector ``dmat[step_row, arange]`` is
+    # gathered ON DEVICE — only a (n_pad,) f32 vector crosses to the host,
+    # never the (qb_pad, n_pad) step block.  Same floats as the host
+    # gather, so the prune band (and hence the trajectory) is unchanged.
+    @functools.partial(jax.jit, static_argnames=("interpret",))
+    def pallas_vec(q, xdev, idx, step_row, interpret=True):
+        from ..kernels.l2_topk import l2_dist
+
+        dmat = l2_dist(q, xdev[idx], block_q=GRAPH_BLOCK_Q,
+                       block_n=GRAPH_BLOCK_N, interpret=interpret)
+        return dmat[step_row, jnp.arange(idx.shape[0])]
+
+    @jax.jit
+    def xla_vec(q, xdev, idx, step_row):
+        a = xdev[idx]
+        qn = jnp.sum(q * q, axis=1, keepdims=True)
+        an = jnp.sum(a * a, axis=1)
+        dmat = qn - 2.0 * q @ a.T + an[None]
+        return dmat[step_row, jnp.arange(idx.shape[0])]
+
+    return {"pallas": pallas, "xla": xla,
+            "pallas_vec": pallas_vec, "xla_vec": xla_vec}
 
 
 def _device_base(index):
@@ -288,7 +314,8 @@ class _BeamState:
 def batched_graph_search(index, queries: np.ndarray, ef: int = 16,
                          topk: int = 10, engine: str = "auto",
                          query_block: int = DEFAULT_QUERY_BLOCK,
-                         kernel_min: int | None = None):
+                         kernel_min: int | None = None,
+                         select: str = "auto"):
     """Beam-batched search; bit-identical to ``index.search_ref``.
 
     ``kernel_min`` is the smallest candidate tile that takes the device
@@ -297,13 +324,26 @@ def batched_graph_search(index, queries: np.ndarray, ef: int = 16,
     tile on CPU, where the scorer competes with the host re-score it
     cannot replace and dispatch only amortizes across a wide tile.
 
+    ``select`` places the per-step distance gather: ``"host"`` pulls the
+    whole scored ``(qb_pad, n_pad)`` step block and gathers
+    ``dmat[step_row, arange]`` in numpy; ``"device"`` gathers on device
+    so only the ``(n_pad,)`` candidate-distance vector crosses to the
+    host (``stats.host_block_bytes`` / ``stats.device_select`` are the
+    ledger); ``"auto"`` selects on device off-CPU.  Either way the same
+    floats feed the same prune, and the exact numpy re-score decides
+    admission — results are bit-identical across ``select`` × ``engine``.
+
     Returns ``(ids (nq, topk) int64, dists (nq, topk) f32, SearchStats)``.
     """
     engine = _resolve_engine(engine)
+    if select not in ("auto", "host", "device"):
+        raise ValueError(f"unknown select mode {select!r} "
+                         "(options: auto, host, device)")
     interpret = _jax().default_backend() == "cpu"
     if kernel_min is None:
         kernel_min = GRAPH_BLOCK_N * (8 if interpret else 1)
-    scorer = _graph_scorers()[engine]
+    dev_sel = select == "device" or (select == "auto" and not interpret)
+    scorer = _graph_scorers()[engine + "_vec" if dev_sel else engine]
     xdev = _device_base(index)
     t0 = time.perf_counter()
     queries = np.asarray(queries)
@@ -315,6 +355,8 @@ def batched_graph_search(index, queries: np.ndarray, ef: int = 16,
     cache = index.decoded_cache
     decodes0 = cache.decodes
     ndis = hops = steps = frontier_size = dedup_hits = 0
+    host_block_bytes = 0
+    n_dev_select = 0
     # base term of scan.rescore_eps; vectorized below as
     # f32eps * (1 + |bound| + qn) == rescore_eps(d, bound, qn, factor)
     f32eps = rescore_eps(d, 0.0, 0.0, PRUNE_EPS_FACTOR)
@@ -392,17 +434,32 @@ def batched_graph_search(index, queries: np.ndarray, ef: int = 16,
                 qblk = np.zeros((_bucket(beam_rows.shape[0], floor=8), d),
                                 np.float32)
                 qblk[:beam_rows.shape[0]] = q32[q0 + beam_rows]
-                if engine == "pallas":
-                    dmat = scorer(qblk, xdev, idx_pad, interpret=interpret)
-                else:
-                    dmat = scorer(qblk, xdev, idx_pad)
-                dmat = np.asarray(dmat)
                 # -- exact admission: kernel prunes, numpy decides ----------
                 # the admission bound only tightens as a step's survivors
                 # are inserted, so the step-entry bound plus the kernel
                 # error band is a sound prune for full beams; short beams
                 # keep everything
-                kd = dmat[step_row, np.arange(cand_v.shape[0])]
+                if dev_sel:
+                    n_dev_select += 1
+                    srow = np.zeros(idx_pad.shape[0], np.int32)
+                    srow[:cand_v.shape[0]] = step_row
+                    if engine == "pallas":
+                        kd = scorer(qblk, xdev, idx_pad, srow,
+                                    interpret=interpret)
+                    else:
+                        kd = scorer(qblk, xdev, idx_pad, srow)
+                    kd = np.asarray(kd)
+                    host_block_bytes += kd.nbytes
+                    kd = kd[:cand_v.shape[0]]
+                else:
+                    if engine == "pallas":
+                        dmat = scorer(qblk, xdev, idx_pad,
+                                      interpret=interpret)
+                    else:
+                        dmat = scorer(qblk, xdev, idx_pad)
+                    dmat = np.asarray(dmat)
+                    host_block_bytes += dmat.nbytes
+                    kd = dmat[step_row, np.arange(cand_v.shape[0])]
                 full = state.b_len[cand_row] >= ef
                 tau = state.b_max[cand_row]
                 eps = f32eps * (1.0 + np.abs(tau) + qn_host[q0 + cand_row])
@@ -453,5 +510,7 @@ def batched_graph_search(index, queries: np.ndarray, ef: int = 16,
         steps=steps,
         frontier_size=frontier_size,
         dedup_hits=dedup_hits,
+        host_block_bytes=host_block_bytes,
+        device_select=n_dev_select,
     )
     return ids, dists, stats

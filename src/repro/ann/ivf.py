@@ -257,17 +257,22 @@ class IVFIndex(CacheOwnerMixin):
     # -- search ---------------------------------------------------------------------
     def search(self, queries: np.ndarray, nprobe: int = 16, topk: int = 10,
                engine: str = "auto", query_block: int = 64,
-               with_keys: bool = False):
+               with_keys: bool = False, select: str = "auto",
+               select_min: int | None = None):
         """Batched search (repro.ann.scan). Returns (ids, dists, SearchStats).
 
         Bit-identical to :meth:`search_ref`; ``engine`` picks the scoring
-        backend ("pallas" kernels, "xla", or "auto" = pallas off-CPU).
-        ``with_keys`` fills ``stats.merge_keys`` with the stable tie-order
-        keys the sharded router merges by (see ``batched_search``).
+        backend ("pallas" kernels, "xla", or "auto" = pallas off-CPU);
+        ``select`` places the top-k cut host- or device-side (segmented
+        top-k, ``repro.kernels.seg_topk``) — results are identical either
+        way, only ``stats.host_block_bytes``/``stats.device_select``
+        change.  ``with_keys`` fills ``stats.merge_keys`` with the stable
+        tie-order keys the sharded router merges by (``batched_search``).
         """
         return batched_search(self, queries, nprobe=nprobe, topk=topk,
                               engine=engine, query_block=query_block,
-                              with_keys=with_keys)
+                              with_keys=with_keys, select=select,
+                              select_min=select_min)
 
     def search_ref(self, queries: np.ndarray, nprobe: int = 16,
                    topk: int = 10):

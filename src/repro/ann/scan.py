@@ -15,11 +15,19 @@ Faiss and Zoom get their throughput from:
 3. **Blocked scoring** of the query block against the arena through the
    Pallas kernels (``l2_dist`` / ``pq_adc``; interpret-mode on CPU) or a
    pure-XLA fallback — both jitted once per bucketed shape.
-4. **Exact top-k**: a stable masked top-k over each query's padded
-   candidate row, then the short-list is re-scored with the *same numpy
-   scalar path the oracle uses*, so returned ids **and distances** are
-   bit-identical to ``search_ref`` (kernel float error only reorders the
-   short-list, never the result — ``RESCORE_SLACK`` guards the boundary).
+4. **Exact top-k**: the short-list within the kernel-error band of the
+   (topk + ``RESCORE_SLACK``)-th best kernel distance is re-scored with
+   the *same numpy scalar path the oracle uses*, so returned ids **and
+   distances** are bit-identical to ``search_ref`` (kernel float error
+   only reorders the short-list, never the result).  The short-list is
+   cut either host-side (a stable masked argsort over the pulled
+   ``(qb, C_pad)`` block) or **device-side** (``select="device"``): a
+   jitted candidate gather + segmented top-k (``repro.kernels.seg_topk``)
+   runs on device and only ``(qb, K)`` shortlist values/offsets cross to
+   the host — never the padded block (``stats.host_block_bytes`` /
+   ``stats.device_select`` are the ledger).  Both cuts produce the same
+   short-list *set*, so results are bit-identical across
+   ``select`` × ``engine``.
 5. **Vectorized late id resolution** (§4.1): the winning ``(cluster,
    offset)`` pairs of all queries are resolved in one pass — per-cluster
    decode through an LRU :class:`DecodedListCache` for stream codecs
@@ -43,6 +51,7 @@ import numpy as np
 
 __all__ = [
     "batched_search",
+    "batched_flat_search",
     "MERGE_KEY_PAD",
     "coarse_probes",
     "select_topk",
@@ -58,6 +67,11 @@ __all__ = [
 # the top-k *set* right up to this slack, never the exact float ordering.
 RESCORE_SLACK = 8
 DEFAULT_QUERY_BLOCK = 64
+# select="auto" tile gate (the kernel_min analogue): on CPU the host numpy
+# select competes with an interpreted/jitted device select plus its dispatch,
+# so only candidate rows at least this wide take the device path; off-CPU
+# auto always selects on device.
+SELECT_MIN_CPU = 4096
 
 
 # ---------------------------------------------------------------------------
@@ -345,6 +359,66 @@ def _adc_scorers():
     return {"pallas": pallas, "xla": xla}
 
 
+@functools.lru_cache(maxsize=None)
+def _device_selector():
+    """Jitted candidate gather + segmented top-k, fused on device.
+
+    From the tiny per-block metadata (probed clusters per query, arena
+    span start/size per cluster) the candidate->arena-position map is
+    recomputed on device, the scored block is gathered in place, and the
+    segmented top-k (``repro.kernels.seg_topk``) cuts each row to its
+    ``k`` smallest ``(value, column)`` pairs — so the ``(qb, C_pad)``
+    distance block never crosses the device boundary; only ``(qb, k)``
+    values, candidate columns and arena positions return to the host.
+    """
+    jax, jnp = _jax(), _jax().numpy
+
+    @functools.partial(jax.jit,
+                       static_argnames=("c_pad", "k", "engine", "interpret"))
+    def run(dmat, probes, start_of, size_of, c_pad, k, engine, interpret):
+        from ..kernels.seg_topk import seg_topk, seg_topk_xla
+
+        pp = size_of[probes]                       # (qb_pad, P)
+        cum = jnp.cumsum(pp, axis=1)
+        col = jnp.arange(c_pad, dtype=jnp.int32)
+        # probe owning each candidate column: count of probe-end offsets
+        # <= col (side="right" skips zero-size probes, matching the host
+        # _spans_concat concatenation exactly)
+        pidx = jax.vmap(lambda c: jnp.searchsorted(c, col, side="right"))(cum)
+        total = cum[:, -1][:, None]
+        valid = col[None, :] < total
+        pc = jnp.minimum(pidx, pp.shape[1] - 1)
+        prev = jnp.where(
+            pidx > 0,
+            jnp.take_along_axis(cum, jnp.maximum(pidx, 1) - 1, axis=1), 0)
+        cl = jnp.take_along_axis(probes, pc, axis=1)
+        pos = start_of[cl] + (col[None, :] - prev)
+        pos = jnp.clip(pos, 0, dmat.shape[1] - 1).astype(jnp.int32)
+        d = jnp.where(valid, jnp.take_along_axis(dmat, pos, axis=1),
+                      jnp.inf)
+        lens = jnp.minimum(total[:, 0], c_pad).astype(jnp.int32)
+        if engine == "pallas":
+            vals, cols = seg_topk(d, lens, k, interpret=interpret)
+        else:
+            vals, cols = seg_topk_xla(d, lens, k)
+        pos_sel = jnp.take_along_axis(pos, cols, axis=1)
+        return vals, cols, pos_sel
+
+    return run
+
+
+def _resolve_select(select: str, c_pad: int, select_min: int) -> bool:
+    """True when this block's top-k runs on device (see ``batched_search``)."""
+    if select == "host":
+        return False
+    if select == "device":
+        return True
+    if select != "auto":
+        raise ValueError(f"unknown select mode {select!r} "
+                         "(options: auto, host, device)")
+    return c_pad >= select_min
+
+
 def _resolve_engine(engine: str) -> str:
     if engine == "auto":
         try:
@@ -407,10 +481,24 @@ def pack_merge_keys(ranks: np.ndarray, offs: np.ndarray) -> np.ndarray:
 def batched_search(index, queries: np.ndarray, nprobe: int = 16,
                    topk: int = 10, engine: str = "auto",
                    query_block: int = DEFAULT_QUERY_BLOCK,
-                   with_keys: bool = False):
+                   with_keys: bool = False, select: str = "auto",
+                   select_min: int | None = None):
     """Batched IVF search; bit-identical to ``index.search_ref``.
 
     Returns ``(ids (nq, topk) int64, dists (nq, topk) f32, SearchStats)``.
+
+    ``select`` places the top-k cut: ``"host"`` pulls the scored
+    ``(qb, C_pad)`` block and argsorts in numpy; ``"device"`` runs the
+    jitted gather + segmented top-k (``repro.kernels.seg_topk``, same
+    ``engine`` choice as the scorer) so only ``(qb, K)`` shortlists cross
+    to the host; ``"auto"`` takes the device path when the candidate row
+    is at least ``select_min`` wide (default: ``SELECT_MIN_CPU`` on CPU,
+    always on accelerators).  Both paths cut the *same* short-list set —
+    every candidate within the kernel-error band of the
+    (topk + ``RESCORE_SLACK``)-th best kernel distance — and the exact
+    re-score decides, so results are bit-identical across
+    ``select`` × ``engine``; only ``stats.host_block_bytes`` /
+    ``stats.device_select`` differ.
 
     ``with_keys=True`` additionally fills ``stats.merge_keys`` with a
     (nq, topk) uint64 array: each result's position in the monolithic
@@ -427,6 +515,9 @@ def batched_search(index, queries: np.ndarray, nprobe: int = 16,
 
     jnp = _jax().numpy
     engine = _resolve_engine(engine)
+    if select not in ("auto", "host", "device"):
+        raise ValueError(f"unknown select mode {select!r} "
+                         "(options: auto, host, device)")
     t0 = time.perf_counter()
     queries = np.asarray(queries)
     nq = queries.shape[0]
@@ -436,10 +527,14 @@ def batched_search(index, queries: np.ndarray, nprobe: int = 16,
     tables = index.pq.adc_tables(queries) if index.pq is not None else None
     use_pq = index.pq is not None
     interpret = _jax().default_backend() == "cpu"
+    if select_min is None:
+        select_min = SELECT_MIN_CPU if interpret else 1
 
     offsets, sizes = index.offsets, index.sizes
     ndis = 0
     nbatches = 0
+    host_block_bytes = 0
+    n_dev_select = 0
     distinct: set = set()
     decodes_before = index.decoded_cache.decodes
     # winning (cluster, offset) pairs across the whole call, resolved in one
@@ -522,9 +617,99 @@ def batched_search(index, queries: np.ndarray, nprobe: int = 16,
                               interpret=interpret)
             else:
                 dmat = scorer(jnp.asarray(qblk), jnp.asarray(arena))
-        dmat = np.asarray(dmat)[:qb]
+        if not use_pq:
+            qn_host = np.einsum("qd,qd->q",
+                                queries[q0:q1].astype(np.float32),
+                                queries[q0:q1].astype(np.float32))
 
-        # --- stable top-k over padded rows + exact re-score ----------------
+        def finish(i, qi, pos):
+            # exact re-score of one query's short-list; ``pos`` holds the
+            # selected arena positions in candidate (oracle concat) order,
+            # so select_topk's stable tie-break reproduces the oracle's.
+            rows = arena_rows[pos]
+            if use_pq:
+                d_exact = ProductQuantizer.adc_score(
+                    index.codes[rows], tables[qi])
+            else:
+                d_exact = score_rows_flat(index.vecs[rows], queries[qi])
+            best = select_topk(d_exact, topk)
+            n_found = best.shape[0]
+            all_d[qi, :n_found] = d_exact[best]
+            # (cluster, offset) from arena position
+            p = pos[best]
+            span = np.searchsorted(arena_start, p, side="right") - 1
+            res_q.append(np.full(n_found, qi, np.int64))
+            res_slot.append(np.arange(n_found, dtype=np.int64))
+            res_cluster.append(uniq[span])
+            res_offset.append(p - arena_start[span])
+            if with_keys:
+                res_key.append(pack_merge_keys(rank_of[i, uniq[span]],
+                                               p - arena_start[span]))
+
+        if _resolve_select(select, c_pad, select_min):
+            # --- device-side segmented top-k -------------------------------
+            # the (qb, C_pad) block stays on device: a jitted gather +
+            # seg_topk returns (qb, K) shortlist values / candidate columns
+            # / arena positions, the host recomputes the SAME short-list
+            # threshold the host path uses (bound of the take-th smallest
+            # kernel value + rescore_eps, in float64 over identical f32
+            # values), and K doubles while any row's shortlist might extend
+            # past it — so the cut set matches the host path exactly.
+            n_dev_select += 1
+            runner = _device_selector()
+            c_pad_b = _bucket(c_pad, floor=128)
+            probes_pad = np.zeros((qb_pad, blk_probes.shape[1]), np.int32)
+            probes_pad[:qb] = blk_probes
+            start32 = np.maximum(start_of, 0).astype(np.int32)
+            size32 = size_of.astype(np.int32)
+            K = min(_bucket(min(topk + RESCORE_SLACK, c_pad), floor=16),
+                    c_pad_b)
+            while True:
+                vals_d, cols_d, pos_d = runner(
+                    dmat, jnp.asarray(probes_pad), jnp.asarray(start32),
+                    jnp.asarray(size32), c_pad=c_pad_b, k=K, engine=engine,
+                    interpret=interpret)
+                vals = np.asarray(vals_d)
+                sel_cols = np.asarray(cols_d)
+                sel_pos = np.asarray(pos_d)
+                host_block_bytes += (vals.nbytes + sel_cols.nbytes
+                                     + sel_pos.nbytes)
+                vals = vals[:qb]
+                thr = np.full(qb, -np.inf)
+                retry = False
+                for i in range(qb):
+                    nvalid = int(cand_lens[i])
+                    if nvalid == 0:
+                        continue
+                    take = min(topk + RESCORE_SLACK, nvalid)
+                    bound = float(vals[i, take - 1])
+                    eps = rescore_eps(index.d, bound,
+                                      0.0 if use_pq else float(qn_host[i]))
+                    thr[i] = bound + eps
+                    if nvalid > K and vals[i, K - 1] <= thr[i]:
+                        retry = True    # band may extend past the K cut
+                if not retry or K >= c_pad_b:
+                    break
+                K = min(2 * K, c_pad_b)
+            for i in range(qb):
+                qi = q0 + i
+                nvalid = int(cand_lens[i])
+                if nvalid == 0:
+                    continue
+                # vals are ascending: count the entries inside the band,
+                # drop padding columns (>= nvalid; real +inf hits keep
+                # their column < nvalid), restore oracle concat order
+                cnt = int(np.searchsorted(vals[i], thr[i], side="right"))
+                cc, pp_sel = sel_cols[i, :cnt], sel_pos[i, :cnt]
+                real = cc < nvalid
+                cc, pp_sel = cc[real], pp_sel[real]
+                finish(i, qi, pp_sel[np.argsort(cc)].astype(np.int64))
+            continue
+
+        # --- host-side stable top-k over the pulled padded block -----------
+        dmat = np.asarray(dmat)
+        host_block_bytes += dmat.nbytes
+        dmat = dmat[:qb]
         safe_pos = np.clip(cand_pos, 0, max(0, u_pad - 1))
         d_blk = np.where(
             cand_pos >= 0,
@@ -532,10 +717,6 @@ def batched_search(index, queries: np.ndarray, nprobe: int = 16,
             np.inf,
         ).astype(np.float32)
         order = np.argsort(d_blk, axis=1, kind="stable")
-        if not use_pq:
-            qn_host = np.einsum("qd,qd->q",
-                                queries[q0:q1].astype(np.float32),
-                                queries[q0:q1].astype(np.float32))
         for i in range(qb):
             qi = q0 + i
             nvalid = int(cand_lens[i])
@@ -557,26 +738,7 @@ def batched_search(index, queries: np.ndarray, nprobe: int = 16,
             # candidate *row positions* are the oracle's concat positions:
             # sorting them restores the oracle's stable tie order.
             sel = np.sort(order[i, :take])
-            pos = cand_pos[i, sel]
-            rows = arena_rows[pos]
-            if use_pq:
-                d_exact = ProductQuantizer.adc_score(
-                    index.codes[rows], tables[qi])
-            else:
-                d_exact = score_rows_flat(index.vecs[rows], queries[qi])
-            best = select_topk(d_exact, topk)
-            n_found = best.shape[0]
-            all_d[qi, :n_found] = d_exact[best]
-            # (cluster, offset) from arena position
-            p = pos[best]
-            span = np.searchsorted(arena_start, p, side="right") - 1
-            res_q.append(np.full(n_found, qi, np.int64))
-            res_slot.append(np.arange(n_found, dtype=np.int64))
-            res_cluster.append(uniq[span])
-            res_offset.append(p - arena_start[span])
-            if with_keys:
-                res_key.append(pack_merge_keys(rank_of[i, uniq[span]],
-                                               p - arena_start[span]))
+            finish(i, qi, cand_pos[i, sel])
 
     # --- late id resolution: one pass over every winning pair --------------
     t_res = time.perf_counter()
@@ -599,6 +761,133 @@ def batched_search(index, queries: np.ndarray, nprobe: int = 16,
         distinct_probed=len(distinct),
         batches=nbatches,
         engine=engine,
+        host_block_bytes=host_block_bytes,
+        device_select=n_dev_select,
         merge_keys=all_keys,
+    )
+    return all_ids, all_d, stats
+
+
+# ---------------------------------------------------------------------------
+# batched flat (brute-force) search
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _flat_select_runner():
+    """Jitted score + segmented top-k for the flat path, fused on device."""
+    jax, jnp = _jax(), _jax().numpy
+
+    @functools.partial(
+        jax.jit, static_argnames=("k", "engine", "interpret", "nvalid"))
+    def run(qblk, base, k, engine, interpret, nvalid):
+        from ..kernels.seg_topk import seg_topk, seg_topk_xla
+
+        if engine == "pallas":
+            from ..kernels.l2_topk import l2_dist
+
+            dmat = l2_dist(qblk, base, interpret=interpret)
+        else:
+            qn = jnp.sum(qblk * qblk, axis=1, keepdims=True)
+            bn = jnp.sum(base * base, axis=1)
+            dmat = qn - 2.0 * qblk @ base.T + bn[None]
+        lens = jnp.full(qblk.shape[0], nvalid, jnp.int32)
+        if engine == "pallas":
+            return seg_topk(dmat, lens, k, interpret=interpret)
+        return seg_topk_xla(dmat, lens, k)
+
+    return run
+
+
+def batched_flat_search(vecs: np.ndarray, queries: np.ndarray,
+                        topk: int = 10, engine: str = "auto",
+                        query_block: int = DEFAULT_QUERY_BLOCK):
+    """Kernel-scored brute-force search; bit-identical to the numpy loop.
+
+    Scores each query block against the whole base through the same
+    engines the IVF path uses (``l2_dist`` Pallas kernel or plain XLA),
+    cuts the short-list with the device-side segmented top-k
+    (``repro.kernels.seg_topk``) so only ``(qb, K)`` shortlists ever
+    reach the host, and re-scores the short-list with the oracle's numpy
+    scalar path (``score_rows_flat`` + ``select_topk``) — so ids **and**
+    distances match ``np.argsort(score_rows_flat(...))`` exactly, ties
+    to the lower row, for either engine.
+
+    Returns ``(ids (nq, topk) int64, dists (nq, topk) f32, SearchStats)``
+    with ``engine="flat-pallas"`` / ``"flat-xla"``.
+    """
+    from .stats import SearchStats
+
+    jnp = _jax().numpy
+    engine = _resolve_engine(engine)
+    interpret = _jax().default_backend() == "cpu"
+    t0 = time.perf_counter()
+    vecs = np.ascontiguousarray(np.asarray(vecs, np.float32))
+    queries = np.asarray(queries, np.float32)
+    nq, d = queries.shape
+    n = vecs.shape[0]
+    topk_eff = min(topk, n)
+    all_ids = np.zeros((nq, topk), np.int64)
+    all_d = np.full((nq, topk), np.inf, np.float32)
+    runner = _flat_select_runner()
+    n_pad = _bucket(max(n, 1))
+    base = np.zeros((n_pad, d), np.float32)
+    base[:n] = vecs
+    base_dev = jnp.asarray(base)
+    nbatches = 0
+    host_block_bytes = 0
+    n_dev_select = 0
+    for q0 in range(0, nq, query_block):
+        q1 = min(nq, q0 + query_block)
+        qb = q1 - q0
+        nbatches += 1
+        n_dev_select += 1
+        qb_pad = _bucket(qb, floor=8)
+        qblk = np.zeros((qb_pad, d), np.float32)
+        qblk[:qb] = queries[q0:q1]
+        qblk_dev = jnp.asarray(qblk)
+        qn_host = np.einsum("qd,qd->q", qblk[:qb], qblk[:qb])
+        K = min(_bucket(min(topk_eff + RESCORE_SLACK, n), floor=16), n_pad)
+        while True:
+            vals_d, cols_d = runner(qblk_dev, base_dev, k=K, engine=engine,
+                                    interpret=interpret, nvalid=n)
+            vals = np.asarray(vals_d)
+            cols = np.asarray(cols_d)
+            host_block_bytes += vals.nbytes + cols.nbytes
+            vals = vals[:qb]
+            thr = np.full(qb, -np.inf)
+            retry = False
+            for i in range(qb):
+                take = min(topk_eff + RESCORE_SLACK, n)
+                if take == 0:
+                    continue
+                bound = float(vals[i, take - 1])
+                eps = rescore_eps(d, bound, float(qn_host[i]))
+                thr[i] = bound + eps
+                if n > K and vals[i, K - 1] <= thr[i]:
+                    retry = True        # band may extend past the K cut
+            if not retry or K >= n_pad:
+                break
+            K = min(2 * K, n_pad)
+        for i in range(qb):
+            qi = q0 + i
+            if n == 0:
+                continue
+            cnt = int(np.searchsorted(vals[i], thr[i], side="right"))
+            rows = cols[i, :cnt]
+            rows = np.sort(rows[rows < n]).astype(np.int64)
+            d_exact = score_rows_flat(vecs[rows], queries[qi])
+            best = select_topk(d_exact, topk)
+            n_found = best.shape[0]
+            all_ids[qi, :n_found] = rows[best]
+            all_d[qi, :n_found] = d_exact[best]
+
+    stats = SearchStats(
+        wall_s=time.perf_counter() - t0,
+        ndis=n * nq,
+        id_resolve_s=0.0,
+        batches=nbatches,
+        engine=f"flat-{engine}",
+        host_block_bytes=host_block_bytes,
+        device_select=n_dev_select,
     )
     return all_ids, all_d, stats

@@ -35,6 +35,13 @@ class SearchStats:
     steps: int = 0             # lockstep beam iterations (batched graph only)
     frontier_size: int = 0     # sum of active beams over steps (graph batched)
     dedup_hits: int = 0        # same-step friend-list fetches shared across beams
+    # -- device-side top-k select ledger (repro.kernels.seg_topk) ------------
+    # bytes of device-computed distance data copied to the host this call:
+    # the full (qb, C_pad) block on the host-select path, only the (qb, K)
+    # shortlists on the device-select path — the proof the block never
+    # materialized host-side when device_select covers every block/step
+    host_block_bytes: int = 0
+    device_select: int = 0     # query blocks / graph steps selected on device
     # -- sharded-serving aggregation (repro.shard) ---------------------------
     shards: int = 0            # shards scattered to (0 = unsharded call)
     shards_failed: int = 0     # shards that missed the deadline / died
@@ -69,5 +76,7 @@ def combine_stats(parts: Sequence[SearchStats], *, wall_s: float,
         out.steps += s.steps
         out.frontier_size += s.frontier_size
         out.dedup_hits += s.dedup_hits
+        out.host_block_bytes += s.host_block_bytes
+        out.device_select += s.device_select
         out.retries += s.retries
     return out

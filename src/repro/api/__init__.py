@@ -7,7 +7,7 @@ save/load for every index type::
 
     idx = index_factory("IVF1024,PQ8x8,ids=roc,codes=polya").build(x)
     dists, ids, stats = idx.search(queries, k=10)
-    blob = save_index(idx)                 # RIDX v2 container
+    blob = save_index(idx)                 # RIDX container (v3 writer)
     idx2 = load_index(blob)                # bit-identical search results
 
 Spec grammar: see :mod:`repro.api.spec` (and ROADMAP.md).  Everything a

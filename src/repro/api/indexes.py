@@ -61,7 +61,8 @@ class _SpecMixin:
 class FlatIndex(_SpecMixin):
     """Exact brute-force search over raw f32 vectors (the recall oracle).
 
-    ``id_map`` (set by the shard planner, serialized in RIDX v2) remaps
+    ``id_map`` (set by the shard planner, serialized in the RIDX
+    container) remaps
     local row indices to global database ids: a hash-partitioned shard
     holds a row subset but still answers with the unsharded id space.
     Rows are kept in ascending global-id order, so the stable local
@@ -74,12 +75,15 @@ class FlatIndex(_SpecMixin):
         self.id_map: Optional[np.ndarray] = None
 
     def build(self, x: np.ndarray, seed: int = 0) -> "FlatIndex":
+        """Store ``x`` as the (n, d) f32 base matrix; no trained state."""
         del seed  # no trained state; accepted for protocol uniformity
         self.vecs = np.asarray(x, np.float32)
         self.n, self.d = self.vecs.shape
         return self
 
     def add(self, x: np.ndarray) -> "FlatIndex":
+        """Append rows (dense ids ``n..n+m-1``); planner shards must route
+        ingest through :meth:`append_rows` instead."""
         if getattr(self, "id_map", None) is not None:
             raise ValueError("cannot add() to a planner-made Flat shard: "
                              "its global-id mapping is fixed by the plan")
@@ -117,31 +121,52 @@ class FlatIndex(_SpecMixin):
         self.id_map = np.concatenate([self.id_map, global_ids])
         return self
 
-    def search(self, queries: np.ndarray, k: int = 10, **opts):
+    def search(self, queries: np.ndarray, k: int = 10,
+               engine: Optional[str] = None, query_block: int = 64, **opts):
+        """Exact k-NN.  ``engine`` (or ``Flat,engine=...`` in the spec)
+        routes scoring through the batched kernel path
+        (``repro.ann.scan.batched_flat_search``: Pallas/XLA scoring +
+        device-side segmented top-k); without one, the legacy per-query
+        numpy loop runs.  Results are bit-identical either way — the
+        kernel path re-scores its short-list with the same scalar numpy
+        expression — only ``stats.engine`` and the select counters tell
+        them apart."""
         if opts:
             raise TypeError(f"FlatIndex.search got unknown options {sorted(opts)}")
-        t0 = time.perf_counter()
+        engine = engine or self.index_spec.engine
         queries = np.asarray(queries, np.float32)
         nq = queries.shape[0]
-        k_eff = min(k, self.n)
-        ids = np.zeros((nq, k), np.int64)
-        dists = np.full((nq, k), np.inf, np.float32)
-        # scalar numpy scoring per query: deterministic, stable ties — the
-        # same path the IVF oracle uses, so results are reproducible bit-wise
-        for qi in range(nq):
-            d = score_rows_flat(self.vecs, queries[qi])
-            sel = select_topk(d, k_eff)
-            ids[qi, :k_eff] = sel
-            dists[qi, :k_eff] = d[sel]
+        if engine is not None:
+            from ..ann.scan import batched_flat_search
+
+            ids, dists, stats = batched_flat_search(
+                self.vecs, queries, topk=k, engine=engine,
+                query_block=query_block)
+        else:
+            t0 = time.perf_counter()
+            k_eff = min(k, self.n)
+            ids = np.zeros((nq, k), np.int64)
+            dists = np.full((nq, k), np.inf, np.float32)
+            # scalar numpy scoring per query: deterministic, stable ties —
+            # the same path the IVF oracle uses, so results are
+            # reproducible bit-wise
+            for qi in range(nq):
+                d = score_rows_flat(self.vecs, queries[qi])
+                sel = select_topk(d, k_eff)
+                ids[qi, :k_eff] = sel
+                dists[qi, :k_eff] = d[sel]
+            stats = SearchStats(wall_s=time.perf_counter() - t0,
+                                ndis=self.n * nq, id_resolve_s=0.0,
+                                engine="flat")
         id_map = getattr(self, "id_map", None)
         if id_map is not None:
             # remap valid slots only: padding must stay id 0 / dist inf
             ids = np.where(np.isfinite(dists), id_map[ids], 0)
-        stats = SearchStats(wall_s=time.perf_counter() - t0,
-                            ndis=self.n * nq, id_resolve_s=0.0, engine="flat")
         return dists, ids, stats
 
     def memory_ledger(self) -> Dict[str, float]:
+        """Bytes by component (vectors + optional id_map); flat stores no
+        compressed ids, so all three id layouts coincide."""
         id_map = getattr(self, "id_map", None)
         map_bytes = float(id_map.nbytes) if id_map is not None else 0.0
         return {
@@ -184,15 +209,19 @@ class IVFApiIndex(_SpecMixin):
 
     @property
     def n(self) -> int:
+        """Size of the id universe (global row count, not rows held)."""
         return self.ivf.n
 
     def build(self, x: np.ndarray, seed: int = 0,
               centroids: Optional[np.ndarray] = None) -> "IVFApiIndex":
+        """Train + populate the inner :class:`IVFIndex` (k-means coarse
+        quantizer unless ``centroids`` is given; one sealed epoch)."""
         self.ivf.build(np.asarray(x, np.float32), seed=seed,
                        centroids=centroids)
         return self
 
     def add(self, x: np.ndarray) -> "IVFApiIndex":
+        """Append rows as one new epoch (dense ids ``n..n+m-1``)."""
         self.ivf.add(x)
         return self
 
@@ -211,23 +240,36 @@ class IVFApiIndex(_SpecMixin):
         return self
 
     def compact(self) -> "IVFApiIndex":
+        """Fold all epochs back into one (recovers single-universe rates)."""
         self.ivf.compact()
         return self
 
     @property
     def n_epochs(self) -> int:
+        """Number of sealed ingest epochs currently stored."""
         return self.ivf.n_epochs
 
     def search(self, queries: np.ndarray, k: int = 10, nprobe: int = 16,
                engine: Optional[str] = None, query_block: int = 64,
-               with_keys: bool = False):
+               with_keys: bool = False, select: str = "auto",
+               select_min: Optional[int] = None):
+        """Compressed-domain IVF search (faiss ``(dists, ids)`` order).
+
+        ``nprobe`` lists are ranked per query; ``engine`` picks the
+        scoring kernel (``auto``/``xla``/``pallas``) and ``select`` where
+        the top-k short-list is cut (``host``/``device``/``auto``) — all
+        bit-identical, see :mod:`repro.ann.scan`."""
         ids, dists, stats = self.ivf.search(
             np.asarray(queries, np.float32), nprobe=nprobe, topk=k,
             engine=engine or self.index_spec.engine or "auto",
-            query_block=query_block, with_keys=with_keys)
+            query_block=query_block, with_keys=with_keys, select=select,
+            select_min=select_min)
         return dists, ids, stats
 
     def memory_ledger(self) -> Dict[str, float]:
+        """Bytes by component: compressed ids vs the uncompressed-64 and
+        ceil(log2 n) baselines, payload (PQ/Pólya or raw), centroids,
+        decoded-list cache."""
         idx = self.ivf
         # vectors actually held: == n monolithically, < n for a planner-made
         # cluster shard (whose id universe stays the global n)
@@ -275,10 +317,13 @@ class GraphApiIndex(_SpecMixin):
 
     @property
     def n(self) -> int:
+        """Size of the id universe (global row count, not rows held)."""
         return self.graph.n
 
     def build(self, x: np.ndarray, seed: int = 0,
               adj: Optional[List[np.ndarray]] = None) -> "GraphApiIndex":
+        """Build the NSG/HNSW adjacency for ``x`` (or take ``adj`` as
+        given) and compress it per list with the spec's id codec."""
         x = np.asarray(x, np.float32)
         if adj is None:
             builder = build_nsg if self.index_spec.kind == "nsg" else build_hnsw
@@ -287,6 +332,8 @@ class GraphApiIndex(_SpecMixin):
         return self
 
     def add(self, x: np.ndarray) -> "GraphApiIndex":
+        """Append rows as a new epoch, wiring them into the graph with
+        degree-capped greedy edges (dense ids ``n..n+m-1``)."""
         if getattr(self.graph, "id_map", None) is not None:
             raise ValueError("cannot add() to a planner-made graph shard: "
                              "its global-id mapping is fixed by the plan; "
@@ -321,21 +368,29 @@ class GraphApiIndex(_SpecMixin):
         return self
 
     def compact(self) -> "GraphApiIndex":
+        """Fold all epochs back into one (recovers single-universe rates)."""
         self.graph.compact()
         return self
 
     @property
     def n_epochs(self) -> int:
+        """Number of sealed ingest epochs currently stored."""
         return self.graph.n_epochs
 
     def search(self, queries: np.ndarray, k: int = 10,
                ef: Optional[int] = None, engine: Optional[str] = None,
-               query_block: int = 64):
+               query_block: int = 64, select: str = "auto"):
+        """Beam (best-first) graph search with compressed adjacency.
+
+        ``ef`` is the beam width (default ``max(16, 2k)``); ``engine``
+        picks the distance kernel and ``select`` whether the per-step
+        candidate distance is gathered on device — bit-identical either
+        way, see :mod:`repro.ann.graph_scan`."""
         ids, dists, stats = self.graph.search(
             np.asarray(queries, np.float32),
             ef=ef if ef is not None else max(16, 2 * k), topk=k,
             engine=engine or self.index_spec.engine or "auto",
-            query_block=query_block)
+            query_block=query_block, select=select)
         id_map = getattr(self.graph, "id_map", None)
         if id_map is not None:
             # shard planner remap (local node -> global id); padding slots
@@ -344,6 +399,8 @@ class GraphApiIndex(_SpecMixin):
         return dists, ids, stats
 
     def memory_ledger(self) -> Dict[str, float]:
+        """Bytes by component: compressed adjacency ids vs uncompressed-64
+        and ceil(log2 n) baselines, raw vectors, decoded-list cache."""
         g = self.graph
         edges = sum(len(a) for a in g.adj_raw)
         id_bytes = g.id_bits() / 8.0

@@ -31,7 +31,13 @@ from typing import Optional
 
 from ..core.codecs import CODEC_NAMES
 
-__all__ = ["IndexSpec", "parse_spec"]
+__all__ = ["IndexSpec", "parse_spec", "KNOWN_OPTION_KEYS"]
+
+#: every ``key=value`` option :func:`parse_spec` accepts, in canonical
+#: emission order.  The grammar block in ``docs/architecture.md`` must
+#: list exactly these keys — analysis rule RPA007 fails on drift.
+KNOWN_OPTION_KEYS = ("ids", "codes", "cache_mb", "cache_policy",
+                     "max_epochs", "engine")
 
 _WT_NAMES = ("wt", "wt1")
 _ID_NAMES = tuple(CODEC_NAMES) + _WT_NAMES
@@ -187,6 +193,5 @@ def parse_spec(spec: str) -> IndexSpec:
             kw["engine"] = val
         else:
             raise ValueError(f"unknown spec option {key!r} "
-                             "(known: ids, codes, cache_mb, cache_policy, "
-                             "max_epochs, engine)")
+                             f"(known: {', '.join(KNOWN_OPTION_KEYS)})")
     return IndexSpec(**kw)

@@ -10,6 +10,8 @@ from .kernel import BLOCK_N, BLOCK_Q, l2_dist_pallas, l2_top1_pallas
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_q"))
 def l2_top1(queries, centroids, block_q: int = BLOCK_Q, interpret: bool = True):
+    """Nearest centroid per query: ``(argmin (nq,) i32, min_d (nq,) f32)``
+    over squared L2, padded to kernel block shapes."""
     nq, d = queries.shape
     k = centroids.shape[0]
     if nq == 0 or k == 0:

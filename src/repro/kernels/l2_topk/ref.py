@@ -12,6 +12,7 @@ def _l2_matrix(queries, cands):
 
 
 def l2_top1_ref(queries, centroids):
+    """Oracle for :func:`l2_top1` — one dense distance matrix + argmin."""
     d = _l2_matrix(queries, centroids)
     return jnp.argmin(d, 1).astype(jnp.int32), jnp.min(d, 1)
 

@@ -5,6 +5,8 @@ import jax.numpy as jnp
 
 
 def rans_decode_ref(heads, words, sym_t, freq_t, start_t, rows: int, r: int):
+    """Oracle for :func:`rans_decode` — the same per-stream state update
+    as the kernel, expressed as one ``lax.scan`` over symbols."""
     mask = jnp.uint32((1 << r) - 1)
     low = jnp.uint32(1 << 16)
 

@@ -1,0 +1,14 @@
+"""Segmented top-k select — the device half of the scan engines' top-k.
+
+``seg_topk`` (Pallas) and ``seg_topk_xla`` (``lax.top_k`` fallback)
+reduce padded per-query candidate rows to their ``k`` smallest
+``(value, column)`` pairs on device, bit-identically to each other; see
+``ops.py`` for the full contract and ``repro.ann.scan`` for the consumer.
+"""
+
+from .kernel import SEG_BLOCK_Q, seg_topk_pallas
+from .ops import seg_topk, seg_topk_xla
+from .ref import seg_topk_ref
+
+__all__ = ["seg_topk", "seg_topk_xla", "seg_topk_ref", "seg_topk_pallas",
+           "SEG_BLOCK_Q"]

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: segmented top-k select over padded distance rows.
+
+The device half of the scan engines' "never ship the ``(qb, C_pad)``
+block to the host" contract: each query row holds ``lens[i]`` valid
+candidate distances followed by padding, and the kernel reduces the row
+to its ``k`` smallest entries *on device*, so only ``(nq, k)`` values and
+columns cross to the host.
+
+Selection order is the lexicographic ``(value asc, column asc)`` minimum
+— the same order ``jax.lax.top_k`` of the negated row produces (ties,
+including ties at ``+inf``, go to the lower column) — so the Pallas
+kernel and the XLA fallback in ``ops.py`` are bit-identical, which is
+what lets the scan layer swap engines without perturbing results.
+
+Grid: (ceil(NQ / block_q),).  Each step holds one full ``(block_q, N)``
+row tile in VMEM and runs ``k`` masked argmin iterations
+(``jax.lax.fori_loop``): per iteration one row minimum, one lowest-
+column-attaining-it reduction (this also breaks ``+inf`` ties the way
+``top_k`` does — value masking alone cannot exclude already-taken
+``+inf`` entries), then the chosen column is marked taken.  ``k`` is a
+compile-time constant; callers bucket it to bound retraces.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["seg_topk_pallas", "SEG_BLOCK_Q"]
+
+# a full row tile lives in VMEM: block_q * N * ~13 bytes (f32 + bool +
+# int32 iota + scratch).  8 rows keep N up to ~100k inside a TPU core's
+# VMEM; the scan layer's candidate rows are far narrower.
+SEG_BLOCK_Q = 8
+
+
+def _seg_topk_kernel(d_ref, len_ref, vals_ref, idx_ref, *, k: int):
+    d = d_ref[...].astype(jnp.float32)          # (bq, n)
+    ln = len_ref[...]                           # (bq,)
+    bq, n = d.shape
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bq, n), 1)
+    d = jnp.where(cols < ln[:, None], d, jnp.inf)
+    tcol = jax.lax.broadcasted_iota(jnp.int32, (bq, k), 1)
+
+    def body(t, carry):
+        taken, vals, idxs = carry
+        avail = ~taken
+        v = jnp.where(avail, d, jnp.inf)
+        m = jnp.min(v, axis=1)                  # row minimum over untaken
+        # lowest untaken column attaining it: breaks value ties by column
+        # AND excludes taken +inf entries (their value alone could not)
+        at = avail & (v == m[:, None])
+        j = jnp.min(jnp.where(at, cols, n), axis=1).astype(jnp.int32)
+        j = jnp.minimum(j, n - 1)               # k > n guard (ops pads n >= k)
+        taken = taken | (cols == j[:, None])
+        vals = jnp.where(tcol == t, m[:, None], vals)
+        idxs = jnp.where(tcol == t, j[:, None], idxs)
+        return taken, vals, idxs
+
+    init = (jnp.zeros((bq, n), jnp.bool_),
+            jnp.full((bq, k), jnp.inf, jnp.float32),
+            jnp.zeros((bq, k), jnp.int32))
+    _, vals, idxs = jax.lax.fori_loop(0, k, body, init)
+    vals_ref[...] = vals
+    idx_ref[...] = idxs
+
+
+def seg_topk_pallas(dists: jnp.ndarray, lens: jnp.ndarray, k: int,
+                    block_q: int = SEG_BLOCK_Q, interpret: bool = True):
+    """dists (NQ, N) f32, lens (NQ,) i32 -> (vals (NQ, k) f32, idx (NQ, k) i32).
+
+    ``NQ`` must be a ``block_q`` multiple and ``N >= k`` (``ops.py`` pads
+    both).  Row ``i``'s columns at or past ``lens[i]`` count as ``+inf``.
+    """
+    nq, n = dists.shape
+    assert nq % block_q == 0 and n >= k
+    grid = (nq // block_q,)
+    return pl.pallas_call(
+        functools.partial(_seg_topk_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, k), jnp.float32),
+            jax.ShapeDtypeStruct((nq, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(dists, lens)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the segmented top-k select.
+
+One stable argsort over the masked row — JAX sorts are always stable, so
+ties (including ties at ``+inf``) keep ascending-column order, the same
+``(value asc, column asc)`` contract the Pallas kernel and the
+``lax.top_k`` fallback implement.  O(N log N) per row; test use only.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["seg_topk_ref"]
+
+
+def seg_topk_ref(dists: jnp.ndarray, lens: jnp.ndarray, k: int):
+    """dists (NQ, N), lens (NQ,) -> (vals (NQ, k) f32, idx (NQ, k) i32)."""
+    nq, n = dists.shape
+    cols = jnp.arange(n, dtype=jnp.int32)[None, :]
+    masked = jnp.where(cols < lens[:, None], dists.astype(jnp.float32),
+                       jnp.inf)
+    if n < k:                                # widen with masked columns
+        masked = jnp.pad(masked, ((0, 0), (0, k - n)),
+                         constant_values=jnp.inf)
+    order = jnp.argsort(masked, axis=1)[:, :k].astype(jnp.int32)
+    vals = jnp.take_along_axis(masked, order, axis=1)
+    return vals, order

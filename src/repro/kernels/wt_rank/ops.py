@@ -28,6 +28,8 @@ def pack_bits_u32(bits: np.ndarray):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def wt_rank(words, super_cum, queries, interpret: bool = True):
+    """``rank1(i)`` for each query position over the packed bitvector:
+    superblock cumulative popcounts + an in-block popcount on device."""
     nq = queries.shape[0]
     pad = (-nq) % BLOCK_Q
     q = jnp.pad(queries.astype(jnp.int32), (0, pad))

@@ -212,6 +212,8 @@ def attention(
 
 
 def init_cache(batch: int, max_len: int, cfg, dtype=jnp.bfloat16) -> KVCache:
+    """Zero-filled :class:`KVCache` sized for ``batch`` sequences of up to
+    ``max_len`` tokens under ``cfg``'s KV-head/head-dim layout."""
     hd = cfg.head_dim_
     shape = (batch, max_len, cfg.n_kv_heads, hd)
     return KVCache(

@@ -9,7 +9,7 @@ stable import point a serving deployment uses.
 
 from ..models.attention import KVCache, init_cache
 from ..train.step import make_prefill_step, make_serve_step
-from .ann_service import AnnService, BatchPolicy, Ticket
+from .ann_service import AddTicket, AnnService, BatchPolicy, Ticket
 
 __all__ = ["KVCache", "init_cache", "make_prefill_step", "make_serve_step",
-           "AnnService", "BatchPolicy", "Ticket"]
+           "AnnService", "AddTicket", "BatchPolicy", "Ticket"]

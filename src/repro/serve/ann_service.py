@@ -92,9 +92,9 @@ class AnnService:
     """Micro-batching front-end over any ``repro.api.Index``.
 
     ``**search_opts`` are forwarded to every ``index.search`` call
-    (IVF: ``nprobe``/``engine``/``query_block``; graph:
-    ``ef``/``engine``/``query_block``), so one service class serves
-    every index type.  ``clock`` is injectable
+    (IVF: ``nprobe``/``engine``/``query_block``/``select``; graph:
+    ``ef``/``engine``/``query_block``/``select``), so one service class
+    serves every index type.  ``clock`` is injectable
     (defaults to ``time.perf_counter``) so the max-wait policy is
     testable without sleeping.
     """
@@ -138,6 +138,8 @@ class AnnService:
         self.decodes = 0
         self.search_s = 0.0
         self.resolve_s = 0.0
+        self.host_block_bytes = 0
+        self.device_selects = 0
         self.last_stats = None         # SearchStats of the most recent flush
         # bounded: long-lived replicas must not grow per-request state
         self._batch_sizes: "deque[int]" = deque(maxlen=4096)
@@ -221,6 +223,7 @@ class AnnService:
         return t
 
     def pending_adds(self) -> int:
+        """Rows currently queued for ingest (not yet applied)."""
         return sum(t.n_rows for t in self._pending_add)
 
     def tick(self) -> bool:
@@ -257,6 +260,8 @@ class AnnService:
         self.decodes += st.decodes
         self.search_s += st.wall_s
         self.resolve_s += st.id_resolve_s
+        self.host_block_bytes += getattr(st, "host_block_bytes", 0)
+        self.device_selects += getattr(st, "device_select", 0)
         self._batch_sizes.append(batch.shape[0])
         row = 0
         for t in tickets:
@@ -283,6 +288,7 @@ class AnnService:
         return t.ids, t.dists
 
     def pending(self) -> int:
+        """Queries currently queued for search (not yet flushed)."""
         return self._pending_total()
 
     def _pending_total(self) -> int:
@@ -306,6 +312,10 @@ class AnnService:
           late-id-resolution time.
         * ``ndis`` / ``decodes`` — distance evaluations and id-list decode
           events (LRU misses).
+        * ``host_block_bytes`` / ``device_selects`` — device-select
+          ledger: bytes of device-computed distance data pulled to the
+          host, and query blocks / graph steps whose top-k cut ran on
+          device (``repro.kernels.seg_topk``).
         """
         bs = np.asarray(self._batch_sizes, np.float64)
         ws = np.asarray(self._waits, np.float64)
@@ -329,6 +339,8 @@ class AnnService:
             "resolve_s": self.resolve_s,
             "ndis": self.ndis,
             "decodes": self.decodes,
+            "host_block_bytes": self.host_block_bytes,
+            "device_selects": self.device_selects,
         }
 
     def memory_ledger(self) -> Dict[str, float]:

@@ -2,7 +2,8 @@
 
 One machine's RAM bounds one :class:`repro.serve.AnnService`; this
 package is the capacity story past that bound.  ``plan_shards`` splits a
-built index into N standalone shard artifacts (RIDX v2 + JSON manifest),
+built index into N standalone shard artifacts (RIDX containers + a JSON
+manifest),
 :class:`ShardedAnnService` scatters query batches across per-shard
 workers and k-way merges the answers bit-identically to the unsharded
 index, and :mod:`repro.shard.faults` degrades gracefully when shards

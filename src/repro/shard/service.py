@@ -147,6 +147,7 @@ class ShardedAnnService:
 
     # -- lifecycle -----------------------------------------------------------
     def close(self) -> None:
+        """Shut down the scatter thread pool (also via context manager)."""
         self._pool.shutdown(wait=False)
 
     def __enter__(self) -> "ShardedAnnService":
@@ -156,6 +157,7 @@ class ShardedAnnService:
         self.close()
 
     def reset_stats(self) -> None:
+        """Zero the router counters (e.g. after a jit warm-up call)."""
         self.requests = 0
         self.queries = 0
         self.batches = 0
@@ -288,6 +290,7 @@ class ShardedAnnService:
         return t
 
     def pending_adds(self) -> int:
+        """Rows currently queued for ingest (not yet routed to shards)."""
         return sum(t.n_rows for t in self._pending_add)
 
     def tick(self) -> bool:
@@ -371,6 +374,7 @@ class ShardedAnnService:
         return (t.ids, t.dists, t.stats) if with_stats else (t.ids, t.dists)
 
     def pending(self) -> int:
+        """Queries currently queued for search (not yet scattered)."""
         return sum(t.n_queries for t in self._pending)
 
     # -- scatter -------------------------------------------------------------
@@ -481,6 +485,9 @@ class ShardedAnnService:
             "resolve_s": sum(w.resolve_s for w in self._workers),
             "ndis": sum(w.ndis for w in self._workers),
             "decodes": sum(w.decodes for w in self._workers),
+            "host_block_bytes": sum(w.host_block_bytes
+                                    for w in self._workers),
+            "device_selects": sum(w.device_selects for w in self._workers),
         }
 
     def worker_stats(self) -> List[Dict[str, float]]:

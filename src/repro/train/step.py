@@ -58,6 +58,9 @@ def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig | None = None,
 
 
 def make_prefill_step(cfg: ModelConfig, unroll: bool = False):
+    """Build ``(model, prefill_step)``: a full forward pass over a prompt
+    batch that returns only the last position's logits — the serving
+    prefill phase that seeds the KV cache for ``make_serve_step``."""
     model = build(cfg)
 
     def prefill_step(params, batch):
@@ -70,6 +73,8 @@ def make_prefill_step(cfg: ModelConfig, unroll: bool = False):
 
 
 def make_serve_step(cfg: ModelConfig, unroll: bool = False):
+    """Build ``(model, serve_step)``: one greedy decode step — append the
+    incoming token to the KV cache, return ``(next_token, cache)``."""
     model = build(cfg)
 
     def serve_step(params, cache, inputs):

@@ -136,6 +136,105 @@ def test_rpa001_hasattr_only_on_hot_paths():
 
 
 # ---------------------------------------------------------------------------
+# RPA007 — spec-grammar / docs drift (tmp-tree fixtures: the rule reads
+# docs/architecture.md relative to the analyzed file)
+# ---------------------------------------------------------------------------
+
+_GRAMMAR_DOC = """# Architecture
+
+```text spec-grammar
+spec := struct ("," key "=" value)*
+
+{keys}
+```
+"""
+
+
+def _spec_tree(tmp_path, code_keys, doc_keys=None, doc=True,
+               keys_line="KNOWN_OPTION_KEYS = ({keys},)"):
+    """tmp/src/repro/api/spec.py + tmp/docs/architecture.md; returns the
+    spec path to analyze."""
+    spec = tmp_path / "src" / "repro" / "api" / "spec.py"
+    spec.parent.mkdir(parents=True)
+    keys = ", ".join(repr(k) for k in code_keys)
+    spec.write_text('"""fixture."""\n' + keys_line.format(keys=keys) + "\n")
+    if doc:
+        doc_path = tmp_path / "docs" / "architecture.md"
+        doc_path.parent.mkdir()
+        lines = "\n".join(f"{k} = <value>" for k in (doc_keys or []))
+        doc_path.write_text(_GRAMMAR_DOC.format(keys=lines))
+    return str(spec)
+
+
+def _rpa007(path):
+    from repro.analysis import analyze_file
+
+    return analyze_file(path, rules=["RPA007"])
+
+
+def test_rpa007_in_sync_is_quiet(tmp_path):
+    keys = ["ids", "engine"]
+    assert _rpa007(_spec_tree(tmp_path, keys, keys)) == []
+
+
+def test_rpa007_parsed_but_undocumented(tmp_path):
+    f = _rpa007(_spec_tree(tmp_path, ["ids", "engine"], ["ids"]))
+    assert len(f) == 1 and "'engine'" in f[0].message
+    assert "missing from the spec-grammar" in f[0].message
+
+
+def test_rpa007_documented_but_not_parsed(tmp_path):
+    f = _rpa007(_spec_tree(tmp_path, ["ids"], ["ids", "bogus"]))
+    assert len(f) == 1 and "'bogus'" in f[0].message
+    assert "not parsed" in f[0].message
+
+
+def test_rpa007_missing_grammar_block(tmp_path):
+    spec = _spec_tree(tmp_path, ["ids"], doc=False)
+    doc = tmp_path / "docs" / "architecture.md"
+    doc.parent.mkdir()
+    doc.write_text("# Architecture\n\nno fenced grammar here\n")
+    f = _rpa007(spec)
+    assert len(f) == 1 and "spec-grammar fenced block" in f[0].message
+
+
+def test_rpa007_missing_doc_file(tmp_path):
+    f = _rpa007(_spec_tree(tmp_path, ["ids"], doc=False))
+    assert len(f) == 1 and "cannot locate" in f[0].message
+
+
+def test_rpa007_keys_must_be_literal_tuple(tmp_path):
+    spec = _spec_tree(tmp_path, ["ids"], ["ids"],
+                      keys_line="KNOWN_OPTION_KEYS = tuple({keys},)")
+    f = _rpa007(spec)
+    assert len(f) == 1 and "module-level tuple" in f[0].message
+
+
+def test_rpa007_scoped_to_spec_module(tmp_path):
+    other = tmp_path / "src" / "repro" / "api" / "other.py"
+    other.parent.mkdir(parents=True)
+    other.write_text("KNOWN_OPTION_KEYS = ('ids',)\n")
+    assert _rpa007(str(other)) == []
+
+
+def test_rpa007_real_repo_in_sync():
+    # the committed grammar block in docs/architecture.md matches what
+    # parse_spec accepts — the live version of the drift the rule guards
+    from repro.analysis import analyze_file
+    from repro.api.spec import KNOWN_OPTION_KEYS, parse_spec
+
+    spec_py = SRC_REPRO / "api" / "spec.py"
+    assert analyze_file(str(spec_py), rules=["RPA007"]) == []
+    # KNOWN_OPTION_KEYS is itself in sync with the parser
+    for key in KNOWN_OPTION_KEYS:
+        with pytest.raises(ValueError) as e:
+            parse_spec(f"IVF8,{key}=@@bad@@")
+        assert "unknown spec option" not in str(e.value)
+    with pytest.raises(ValueError, match="unknown spec option"):
+        parse_spec("IVF8,nope=1")
+
+
+# ---------------------------------------------------------------------------
 # framework
 # ---------------------------------------------------------------------------
 
@@ -163,9 +262,11 @@ def test_unknown_rule_rejected():
         analyze_source("x = 1\n", "repro/x.py", rules=["RPA999"])
 
 
-def test_registry_has_all_six_rules():
+def test_registry_has_all_rules():
     rules = {c.rule for c in all_checkers()}
-    assert rules == set(CASES)
+    # RPA007 checks against a docs artifact, so its fixtures are tmp
+    # trees (below) rather than CASES entries
+    assert rules == set(CASES) | {"RPA007"}
 
 
 def test_baseline_round_trip(tmp_path):

@@ -102,6 +102,40 @@ def test_parity_kernel_gate_settings(data, graphs):
 
 
 # ---------------------------------------------------------------------------
+# device-side step select (select="device")
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("kind", ["nsg", "hnsw"])
+def test_parity_device_select(data, graphs, kind, engine):
+    base, queries = data
+    idx = GraphIndex(id_codec="roc").build(base, graphs[kind])
+    st = _assert_parity(idx, queries, engine=engine, kernel_min=1,
+                        select="device")
+    # every kernel-scored step gathered its distances on device, and only
+    # the per-candidate vectors (not the step blocks) crossed to the host
+    assert st.device_select > 0
+    _, _, st_h = idx.search(queries, ef=24, topk=10, engine=engine,
+                            kernel_min=1, select="host")
+    assert st_h.device_select == 0
+    assert 0 < st.host_block_bytes < st_h.host_block_bytes
+
+
+@pytest.mark.parametrize("codec", ["compact", "gap_ans"])
+def test_parity_device_select_codecs(data, graphs, codec):
+    base, queries = data
+    idx = GraphIndex(id_codec=codec).build(base, graphs["nsg"])
+    _assert_parity(idx, queries, kernel_min=1, select="device")
+
+
+def test_graph_select_unknown_mode_raises(data, graphs):
+    base, queries = data
+    idx = GraphIndex(id_codec="roc").build(base, graphs["nsg"])
+    with pytest.raises(ValueError, match="select"):
+        idx.search(queries[:2], select="gpu")
+
+
+# ---------------------------------------------------------------------------
 # edge cases
 # ---------------------------------------------------------------------------
 

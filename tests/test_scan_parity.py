@@ -158,6 +158,89 @@ def test_resolve_ids_batch_matches_scalar(data):
 
 
 # ---------------------------------------------------------------------------
+# device-side top-k select (repro.kernels.seg_topk)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("codec", ALL_CODECS)
+def test_device_select_parity_all_codecs(data, codec, engine):
+    base, queries = data
+    idx = IVFIndex(nlist=24, id_codec=codec).build(base, seed=1)
+    st = _assert_parity(idx, queries, nprobe=6, topk=10, engine=engine,
+                        select="device")
+    # every block cut on device; only shortlists crossed to the host
+    assert st.device_select == st.batches > 0
+    _, _, st_h = idx.search(queries, nprobe=6, topk=10, engine=engine,
+                            select="host")
+    assert st_h.device_select == 0
+    assert 0 < st.host_block_bytes < st_h.host_block_bytes
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_device_select_parity_pq(data, engine):
+    base, queries = data
+    pq = ProductQuantizer(m=8, bits=8)
+    idx = IVFIndex(nlist=16, id_codec="roc", pq=pq).build(base, seed=1)
+    st = _assert_parity(idx, queries[:12], nprobe=5, topk=8, engine=engine,
+                        select="device")
+    assert st.device_select == st.batches > 0
+
+
+def test_device_select_near_duplicate_ties():
+    """The device cut must extend through the same kernel-error band the
+    host cut does, so near-duplicate pileups stay bit-identical."""
+    rng = np.random.default_rng(8)
+    v = rng.standard_normal(16).astype(np.float32)
+    dupes = v[None] + 1e-7 * rng.standard_normal((40, 16)).astype(np.float32)
+    rest = rng.standard_normal((400, 16)).astype(np.float32) + 4.0
+    base = np.concatenate([np.repeat(v[None], 40, 0), dupes, rest])
+    idx = IVFIndex(nlist=4, id_codec="roc").build(base.astype(np.float32),
+                                                  seed=9)
+    _assert_parity(idx, v[None], nprobe=4, topk=10, select="device")
+
+
+def test_device_select_merge_keys_identical(data):
+    base, queries = data
+    idx = IVFIndex(nlist=24, id_codec="roc").build(base, seed=1)
+    _, _, st_h = idx.search(queries, nprobe=6, topk=5, select="host",
+                            with_keys=True)
+    _, _, st_d = idx.search(queries, nprobe=6, topk=5, select="device",
+                            with_keys=True)
+    np.testing.assert_array_equal(st_d.merge_keys, st_h.merge_keys)
+
+
+def test_select_auto_threshold(data):
+    """``auto`` takes the device path exactly when the candidate row is at
+    least ``select_min`` wide (CPU default: SELECT_MIN_CPU)."""
+    base, queries = data
+    idx = IVFIndex(nlist=24, id_codec="roc").build(base, seed=1)
+    _, _, st_on = idx.search(queries, nprobe=6, topk=5, select="auto",
+                             select_min=1)
+    assert st_on.device_select == st_on.batches > 0
+    _, _, st_off = idx.search(queries, nprobe=6, topk=5, select="auto",
+                              select_min=1 << 30)
+    assert st_off.device_select == 0
+
+
+def test_select_unknown_mode_raises(data):
+    base, queries = data
+    idx = IVFIndex(nlist=8, id_codec="roc").build(base, seed=1)
+    with pytest.raises(ValueError, match="select"):
+        idx.search(queries[:2], select="gpu")
+
+
+def test_device_select_query_block_invariance(data):
+    base, queries = data
+    idx = IVFIndex(nlist=24, id_codec="roc").build(base, seed=1)
+    ref = idx.search(queries, nprobe=6, topk=5, select="device")
+    for qb in (1, 3, 7):
+        got = idx.search(queries, nprobe=6, topk=5, select="device",
+                         query_block=qb)
+        np.testing.assert_array_equal(got[0], ref[0])
+        np.testing.assert_array_equal(got[1], ref[1])
+
+
+# ---------------------------------------------------------------------------
 # AnnService
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,179 @@
+"""Segmented top-k select (``repro.kernels.seg_topk``): the Pallas kernel,
+the ``lax.top_k`` fallback and the stable-argsort oracle must be
+bit-identical — values AND columns — on every edge the scan layer hits:
+k past the segment length, empty segments, all-inf rows, k=1, tie pileups.
+Plus the flat brute-force consumer (``batched_flat_search``)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.seg_topk import (SEG_BLOCK_Q, seg_topk, seg_topk_ref,
+                                    seg_topk_xla)
+
+jax.config.update("jax_platforms", "cpu")
+
+
+def _check_all(dists, lens, k):
+    """All three engines agree exactly; returns (vals, idx)."""
+    d = jnp.asarray(dists, jnp.float32)
+    ln = jnp.asarray(lens, jnp.int32)
+    vr, ir = seg_topk_ref(d, ln, k)
+    vx, ix = seg_topk_xla(d, ln, k)
+    vp, ip = seg_topk(d, ln, k)
+    np.testing.assert_array_equal(np.asarray(vx), np.asarray(vr))
+    np.testing.assert_array_equal(np.asarray(ix), np.asarray(ir))
+    np.testing.assert_array_equal(np.asarray(vp), np.asarray(vr))
+    np.testing.assert_array_equal(np.asarray(ip), np.asarray(ir))
+    return np.asarray(vr), np.asarray(ir)
+
+
+@pytest.mark.parametrize("nq,n,k", [(8, 64, 10), (3, 200, 16), (16, 130, 1),
+                                    (1, 7, 4), (5, 33, 33)])
+def test_engines_bit_identical_random(nq, n, k):
+    rng = np.random.default_rng(0)
+    d = rng.standard_normal((nq, n)).astype(np.float32)
+    lens = rng.integers(0, n + 1, size=nq)
+    vals, idx = _check_all(d, lens, k)
+    assert vals.shape == (nq, k) and idx.shape == (nq, k)
+    # ascending values (inf <= inf holds; np.diff would produce nan)
+    assert np.all(vals[:, :-1] <= vals[:, 1:])
+
+
+def test_k_exceeds_segment_length():
+    """Rows shorter than k: real candidates first, +inf padding after,
+    padding columns are the lowest masked ones (lax.top_k tie order)."""
+    d = np.arange(12, dtype=np.float32).reshape(2, 6)
+    lens = np.array([3, 0])
+    vals, idx = _check_all(d, lens, 5)
+    np.testing.assert_array_equal(idx[0], [0, 1, 2, 3, 4])
+    np.testing.assert_array_equal(vals[0], [0, 1, 2, np.inf, np.inf])
+    # empty segment: everything is padding, columns ascend from 0
+    np.testing.assert_array_equal(idx[1], [0, 1, 2, 3, 4])
+    assert np.all(np.isinf(vals[1]))
+
+
+def test_k_exceeds_row_width():
+    """k > N: the row itself must be widened with masked columns."""
+    d = np.array([[3.0, 1.0, 2.0]], np.float32)
+    vals, idx = _check_all(d, np.array([3]), 6)
+    np.testing.assert_array_equal(idx[0, :3], [1, 2, 0])
+    np.testing.assert_array_equal(vals[0, :3], [1.0, 2.0, 3.0])
+    assert np.all(np.isinf(vals[0, 3:]))
+
+
+def test_all_inf_rows():
+    """Genuine +inf distances tie with the mask; column order must still
+    be ascending and identical across engines (the scan layer separates
+    real hits from padding by ``idx < lens``)."""
+    d = np.full((4, 8), np.inf, np.float32)
+    lens = np.array([8, 3, 0, 5])
+    vals, idx = _check_all(d, lens, 4)
+    for row in idx:
+        np.testing.assert_array_equal(row, [0, 1, 2, 3])
+    assert np.all(np.isinf(vals))
+
+
+def test_k_one_and_ties():
+    d = np.array([[2.0, 1.0, 1.0, 5.0],
+                  [7.0, 7.0, 7.0, 7.0]], np.float32)
+    vals, idx = _check_all(d, np.array([4, 4]), 1)
+    np.testing.assert_array_equal(idx[:, 0], [1, 0])   # ties -> lower column
+    np.testing.assert_array_equal(vals[:, 0], [1.0, 7.0])
+
+
+def test_tie_pileup_order():
+    """Many equal values: selection must walk columns left to right."""
+    d = np.zeros((2, 50), np.float32)
+    d[1, :10] = -1.0
+    vals, idx = _check_all(d, np.array([50, 50]), 12)
+    np.testing.assert_array_equal(idx[0], np.arange(12))
+    np.testing.assert_array_equal(idx[1], np.arange(12))
+
+
+def test_block_q_boundary_shapes():
+    """nq not a multiple of the kernel block: padding rows must not leak."""
+    rng = np.random.default_rng(1)
+    for nq in (1, SEG_BLOCK_Q - 1, SEG_BLOCK_Q, SEG_BLOCK_Q + 3):
+        d = rng.standard_normal((nq, 40)).astype(np.float32)
+        _check_all(d, np.full(nq, 40), 5)
+
+
+def test_empty_batch_and_k_zero():
+    d = jnp.zeros((0, 16), jnp.float32)
+    vals, idx = seg_topk(d, jnp.zeros(0, jnp.int32), 4)
+    assert vals.shape == (0, 4) and idx.shape == (0, 4)
+    d2 = jnp.zeros((3, 16), jnp.float32)
+    vals2, idx2 = seg_topk_xla(d2, jnp.full(3, 16, jnp.int32), 0)
+    assert vals2.shape == (3, 0) and idx2.shape == (3, 0)
+
+
+# ---------------------------------------------------------------------------
+# flat brute-force consumer
+# ---------------------------------------------------------------------------
+
+def _flat_oracle(vecs, queries, topk):
+    from repro.ann.scan import score_rows_flat, select_topk
+
+    ids = np.zeros((queries.shape[0], topk), np.int64)
+    dists = np.full((queries.shape[0], topk), np.inf, np.float32)
+    k_eff = min(topk, vecs.shape[0])
+    for qi, q in enumerate(queries):
+        d = score_rows_flat(vecs, q)
+        sel = select_topk(d, k_eff)
+        ids[qi, :k_eff] = sel
+        dists[qi, :k_eff] = d[sel]
+    return ids, dists
+
+
+@pytest.mark.parametrize("engine", ["xla", "pallas"])
+def test_batched_flat_search_parity(engine):
+    from repro.ann.scan import batched_flat_search
+
+    rng = np.random.default_rng(2)
+    vecs = rng.standard_normal((700, 24)).astype(np.float32)
+    vecs[10] = vecs[5]                       # duplicate rows: tie stress
+    vecs[11] = vecs[5]
+    queries = rng.standard_normal((19, 24)).astype(np.float32)
+    queries[0] = vecs[5]
+    ref_ids, ref_d = _flat_oracle(vecs, queries, 10)
+    ids, dists, st = batched_flat_search(vecs, queries, topk=10,
+                                         engine=engine, query_block=8)
+    np.testing.assert_array_equal(ids, ref_ids)
+    np.testing.assert_array_equal(dists, ref_d)
+    assert st.engine == f"flat-{engine}"
+    assert st.device_select == st.batches > 0
+    # the (qb, n_pad) block never crossed: pulled bytes stay shortlist-sized
+    assert st.host_block_bytes < vecs.shape[0] * queries.shape[0] * 4
+
+
+def test_batched_flat_search_topk_exceeds_n():
+    from repro.ann.scan import batched_flat_search
+
+    rng = np.random.default_rng(3)
+    vecs = rng.standard_normal((6, 8)).astype(np.float32)
+    queries = rng.standard_normal((4, 8)).astype(np.float32)
+    ref_ids, ref_d = _flat_oracle(vecs, queries, 10)
+    ids, dists, _ = batched_flat_search(vecs, queries, topk=10)
+    np.testing.assert_array_equal(ids, ref_ids)
+    np.testing.assert_array_equal(dists, ref_d)
+
+
+@pytest.mark.parametrize("engine", ["xla", "pallas"])
+def test_flat_api_index_engine_path(engine):
+    """``Flat,engine=...`` specs route through the kernel path and stay
+    bit-identical to the legacy numpy loop (id_map remap included)."""
+    from repro.api import index_factory
+
+    rng = np.random.default_rng(4)
+    vecs = rng.standard_normal((300, 16)).astype(np.float32)
+    queries = rng.standard_normal((9, 16)).astype(np.float32)
+    legacy = index_factory("Flat").build(vecs)
+    fast = index_factory(f"Flat,engine={engine}").build(vecs)
+    d_ref, i_ref, st_ref = legacy.search(queries, k=5)
+    d, i, st = fast.search(queries, k=5)
+    np.testing.assert_array_equal(i, i_ref)
+    np.testing.assert_array_equal(d, d_ref)
+    assert st_ref.engine == "flat" and st.engine == f"flat-{engine}"
+    assert st.device_select > 0

@@ -96,6 +96,52 @@ def test_ivf_shard_parity_pallas_engine(data):
     np.testing.assert_array_equal(d_s, d0)
 
 
+@pytest.mark.parametrize("engine", ["xla", "pallas"])
+def test_ivf_shard_parity_device_select(data, engine):
+    """Sharded merge over device-selected shards: the merge keys consume
+    device-chosen offsets unchanged, so the merged output stays
+    bit-identical to the unsharded device-select call — and to the
+    unsharded host-select call."""
+    x, q = data
+    mono = _mono(data, "IVF32,ids=roc")
+    d0, i0, _ = mono.search(q, k=K, nprobe=NPROBE, engine=engine,
+                            select="host")
+    d1, i1, _ = mono.search(q, k=K, nprobe=NPROBE, engine=engine,
+                            select="device")
+    np.testing.assert_array_equal(i1, i0)
+    np.testing.assert_array_equal(d1, d0)
+    svc = ShardedAnnService(plan_shards(mono, 3), topk=K, nprobe=NPROBE,
+                            engine=engine, select="device")
+    ids_s, d_s, st = svc.search(q, with_stats=True)
+    stats = svc.stats()
+    svc.close()
+    np.testing.assert_array_equal(ids_s, i0)
+    np.testing.assert_array_equal(d_s, d0)
+    # per-shard device_select counters survive combine_stats and the
+    # service ledger: the host never received a (qb, C_pad) block
+    assert st.device_select > 0 and st.host_block_bytes > 0
+    assert stats["device_selects"] > 0
+
+
+def test_graph_shard_parity_device_select():
+    """Graph shards under device select, in the exhaustive regime
+    (ef >= n) where sharded graph parity is exact."""
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((300, 8)).astype(np.float32)
+    q = rng.standard_normal((5, 8)).astype(np.float32)
+    mono = index_factory("NSG8,ids=roc").build(x, seed=0)
+    d0, i0, _ = mono.search(q, k=10, ef=400, select="host")
+    d1, i1, _ = mono.search(q, k=10, ef=400, select="device")
+    np.testing.assert_array_equal(i1, i0)
+    np.testing.assert_array_equal(d1, d0)
+    svc = ShardedAnnService(plan_shards(mono, 2, seed=0), topk=10, ef=400,
+                            select="device")
+    ids_s, d_s = svc.search(q)
+    svc.close()
+    np.testing.assert_array_equal(ids_s, i0)
+    np.testing.assert_array_equal(d_s, d0)
+
+
 def test_ivf_shard_parity_pq_polya(data):
     x, q = data
     mono = _mono(data, "IVF32,PQ4,ids=gap_ans,codes=polya")
